@@ -1,0 +1,91 @@
+"""Beyond-paper benchmark: dwarf proxies of the LM fleet.
+
+For each (arch x shape) dry-run cell, auto-generate a dwarf proxy seeded
+from the cell's HLO dwarf decomposition, tune it against the cell's metric
+vector, and report (a) metric accuracy and (b) 'architecture simulation'
+speedup = cell lower+compile+analyze time / proxy lower+compile+analyze time.
+This is the paper's 100x-simulation-cut applied to accelerator-scale
+workloads.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from repro.core import (proxy_from_dwarf_weights, vector_accuracy)
+from repro.core.autotune import autotune
+from repro.core.metrics import CostReport, metric_vector
+
+from .common import BENCH_DIR, REFRESH, csv_row
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+#: cells representative of each family (full sweep is expensive on 1 core)
+CELLS = (
+    ("qwen2-7b", "train_4k", "16x16"),
+    ("kimi-k2-1t-a32b", "train_4k", "16x16"),
+    ("xlstm-1.3b", "train_4k", "16x16"),
+    ("jamba-1.5-large-398b", "prefill_32k", "16x16"),
+    ("whisper-large-v3", "train_4k", "16x16"),
+)
+
+
+def _report_from_json(d: Dict) -> CostReport:
+    rep = CostReport()
+    r = d["report"]
+    import dataclasses as _dc
+    fields = {f.name for f in _dc.fields(CostReport)}
+    for k, v in r.items():
+        if k in fields and isinstance(v, (int, float)):
+            setattr(rep, k, float(v))
+    rep.op_mix = {k: float(v) for k, v in r.get("op_mix", {}).items()}
+    rep.collective_bytes = {k: float(v)
+                            for k, v in r.get("collective_bytes", {}).items()}
+    return rep
+
+
+def _dwarf_weights_from_report(rep: CostReport) -> Dict[str, float]:
+    from repro.core.profiler import decompose_to_dwarfs
+    return decompose_to_dwarfs(rep)
+
+
+def bench_lm_proxy() -> List[str]:
+    rows = []
+    for arch, shape, mesh in CELLS:
+        cell = DRYRUN_DIR / f"{arch}__{shape}__{mesh}.json"
+        if not cell.exists():
+            rows.append(csv_row(f"lmproxy/{arch}_{shape}", 0.0,
+                                "missing dry-run cell"))
+            continue
+        cache = BENCH_DIR / f"lmproxy_{arch}_{shape}_{mesh}.json"
+        if cache.exists() and not REFRESH:
+            d = json.loads(cache.read_text())
+            rows.append(csv_row(f"lmproxy/{arch}_{shape}",
+                                d["acc"] * 100, d["derived"]))
+            continue
+        d = json.loads(cell.read_text())
+        rep = _report_from_json(d)
+        target = metric_vector(rep)
+        full_sim_s = d["lower_s"] + d["compile_s"]
+        weights = _dwarf_weights_from_report(rep)
+        proxy = proxy_from_dwarf_weights(
+            f"proxy_{arch}_{shape}", weights, base_size=1 << 16, chunk=512)
+        res = autotune(proxy, target, tol=0.15, max_iter=20)
+        pp = res.proxy.profile(execute=True, exec_iters=1)
+        acc = vector_accuracy(
+            target, pp.metrics,
+            keys=[k for k in target
+                  if k.startswith(("mix_", "arithmetic", "vpu_share"))
+                  and (target[k] > 1e-9 or pp.metrics.get(k, 0) > 1e-9)])
+        sim_speedup = full_sim_s / max(pp.simulation_s, 1e-9)
+        derived = (f"acc={acc['avg']:.3f};sim_speedup={sim_speedup:.0f}x;"
+                   f"full_compile_s={full_sim_s:.1f};"
+                   f"proxy_compile_s={pp.simulation_s:.2f};"
+                   f"proxy_exec_ms={pp.exec_s*1e3:.1f}")
+        cache.write_text(json.dumps({"acc": acc["avg"], "derived": derived,
+                                     "dag": res.proxy.dag.to_json()}))
+        rows.append(csv_row(f"lmproxy/{arch}_{shape}", acc["avg"] * 100,
+                            derived))
+    return rows

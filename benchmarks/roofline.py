@@ -1,0 +1,30 @@
+"""Roofline table rows from the cached dry-run cells."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+from .common import csv_row
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def bench_roofline(tag: str = "") -> List[str]:
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob(f"*{tag}.json")):
+        d = json.loads(f.read_text())
+        name = f"roofline/{d['arch']}_{d['shape']}_{d['mesh']}"
+        if d["status"] != "ok":
+            rows.append(csv_row(name, 0.0, d["status"]))
+            continue
+        r = d["roofline"]
+        rows.append(csv_row(
+            name, r["step_time_s"] * 1e6,
+            f"dom={r['dominant']};c={r['compute_s']:.3f};m={r['memory_s']:.3f};"
+            f"x={r['collective_s']:.3f};mfu={r['mfu']:.4f};"
+            f"useful={r['useful_flops_ratio']:.2f};"
+            f"peakGB={d['bytes_per_device']['peak']/1e9:.1f};"
+            f"fits={d['fits_16GB']}"))
+    return rows

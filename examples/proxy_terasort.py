@@ -1,0 +1,58 @@
+"""Paper reproduction, single workload: Proxy TeraSort vs 'Hadoop' TeraSort.
+
+Mirrors the paper's §3: run the original at full scale (gensort-style
+records, sample->partition->sort->count pipeline with Hadoop-style host
+spills), then the tuned Table-3 proxy, and print the Table-6/Fig-5 numbers.
+
+Run:  PYTHONPATH=src python examples/proxy_terasort.py [--scale small|full]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import characterize, vector_accuracy
+from repro.core.autotune import autotune
+from repro.core.metrics import REPORT_METRICS
+from repro.core.stacks import hadoop
+from repro.core.workloads import SCALES, WORKLOADS, workload_step_fn
+from repro.data import gen_records
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small", choices=["tiny", "small", "full"])
+    args = ap.parse_args()
+
+    print(f"== Hadoop TeraSort ({args.scale}: "
+          f"{SCALES[args.scale]['terasort_n']:,} records) ==")
+    fn, wargs = workload_step_fn("terasort", args.scale)
+    orig = characterize(fn, wargs, name="terasort", execute=True, exec_iters=2)
+    print(f"   sort step: {orig.exec_s:.3f} s")
+
+    # Hadoop-substrate run with host-spilled intermediates (the I/O axis)
+    keys, _ = gen_records(jax.random.PRNGKey(0), SCALES[args.scale]["terasort_n"])
+    t0 = time.perf_counter()
+    _, io_bytes = hadoop(lambda c: jnp.sort(c.reshape(-1)),
+                         lambda x: jnp.sort(x), keys, n_chunks=8)
+    t = time.perf_counter() - t0
+    print(f"   hadoop-substrate: {t:.2f} s, spill {io_bytes/1e6:.0f} MB "
+          f"({io_bytes/t/1e6:.0f} MB/s)")
+
+    print("== Proxy TeraSort (Table 3: 70% sort / 10% sampling / 20% graph) ==")
+    res = autotune(WORKLOADS["terasort"].make_proxy(), orig.metrics,
+                   tol=0.15, max_iter=20)
+    pp = res.proxy.profile(execute=True, exec_iters=3)
+    keys_m = [k for k in REPORT_METRICS if k in orig.metrics]
+    acc = vector_accuracy(orig.metrics, pp.metrics, keys=keys_m)
+    print(f"   tuned in {res.iterations} iterations; proxy runs "
+          f"{pp.exec_s*1e3:.1f} ms")
+    print(f"   speedup {orig.exec_s/pp.exec_s:.0f}x   "
+          f"avg accuracy {acc['avg']:.3f} "
+          f"(paper: 136x-336x at >=90%)")
+
+
+if __name__ == "__main__":
+    main()

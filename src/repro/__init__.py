@@ -1,0 +1,4 @@
+"""repro: dwarf-based scalable benchmarking methodology on a multi-pod JAX
+LM framework (see DESIGN.md)."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,22 @@
+"""Architecture registry: one module per assigned architecture."""
+from typing import Dict
+
+from .base import SHAPES, ArchConfig, ShapeSpec, cell_is_supported
+from . import (granite_moe_3b_a800m, jamba_1_5_large_398b, kimi_k2_1t_a32b,
+               phi4_mini_3_8b, qwen2_7b, qwen2_vl_2b, qwen3_4b,
+               tinyllama_1_1b, whisper_large_v3, xlstm_1_3b)
+
+ARCHS: Dict[str, ArchConfig] = {m.CONFIG.name: m.CONFIG for m in (
+    qwen2_7b, phi4_mini_3_8b, tinyllama_1_1b, qwen3_4b, xlstm_1_3b,
+    granite_moe_3b_a800m, kimi_k2_1t_a32b, qwen2_vl_2b, whisper_large_v3,
+    jamba_1_5_large_398b)}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ARCHS", "SHAPES", "ArchConfig", "ShapeSpec", "get_arch",
+           "cell_is_supported"]

@@ -1,0 +1,207 @@
+"""Architecture config system.
+
+One ``ArchConfig`` per assigned architecture (exact numbers from the public
+sources listed in the brief).  ``reduced()`` yields the same family at smoke
+scale for CPU tests; the full config is only ever lowered AOT (dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    tie_embeddings: bool = False
+
+    # block pattern: layer types within one scanned block (see models/blocks).
+    # n_layers must be divisible by len(pattern); the stack is
+    # n_layers//len(pattern) scanned repetitions of the pattern.
+    pattern: Tuple[str, ...] = ("attn",)
+
+    # MoE
+    moe_experts: int = 0
+    moe_topk: int = 0
+    moe_capacity_factor: float = 1.25
+
+    # SSM (mamba) / xLSTM
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    chunk: int = 256               # chunkwise-scan length for ssm/mlstm
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0           # fixed frame count from the (stub) frontend
+
+    # VLM
+    vision_tokens: int = 0
+    mrope: bool = False
+
+    # numerics / technique knobs
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "none"     # none | dots  (what the block remat saves)
+    logits_fp32: bool = True
+
+    # distribution hints (set per-run by the launcher, not per-arch):
+    # batch axes for activation constraints, and the mesh axis used for
+    # sequence-parallel attention when n_heads % tp != 0 (head-replication
+    # would otherwise compute attention redundantly on every model shard).
+    mesh_batch_axes: Optional[Tuple[str, ...]] = None
+    attn_seq_shard: Optional[str] = None
+    # group-local MoE routing: tokens are routed within dp-local groups with
+    # per-group capacity, so dispatch/combine (and their grads) never cross
+    # data shards; 0 = single global group.
+    moe_groups: int = 0
+    # expert-parallel mode: experts sharded over 'model' (requires
+    # moe_experts % tp == 0); else per-expert tensor parallelism.
+    moe_ep: bool = False
+
+    def __post_init__(self):
+        if self.n_layers % len(self.pattern) != 0:
+            raise ValueError(f"{self.name}: n_layers {self.n_layers} not "
+                             f"divisible by pattern {len(self.pattern)}")
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def attention_free(self) -> bool:
+        return all(t in ("mlstm", "slstm") for t in self.pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k: recurrent/hybrid sequence mixing."""
+        return any(t in ("mlstm", "slstm", "mamba", "mamba_moe")
+                   for t in self.pattern)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, ff, hd = self.d_model, self.d_ff, self.hd
+        qkv = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+            + self.n_heads * hd * d
+        if self.qkv_bias:
+            qkv += (self.n_heads + 2 * self.n_kv_heads) * hd
+        mlp = 3 * d * ff
+        moe = self.moe_experts * 3 * d * ff + d * self.moe_experts
+        di, st = self.d_inner, self.ssm_state
+        mamba = (d * 2 * di + di * (self.ssm_conv + 2 * st + 1)
+                 + (di // 16 + 1) * di + di * st + di + di * d)
+        mlstm = d * 2 * d + 3 * d * self.n_heads * self.hd_x() \
+            + d * 2 * self.n_heads + d * d
+        slstm = d * 4 * d + 4 * self.hd_x() * d + 2 * d
+        per_type = {
+            "attn": qkv + mlp + 2 * d,
+            "attn_enc": qkv + mlp + 2 * d,
+            "attn_cross": 2 * qkv + mlp + 3 * d,
+            "attn_moe": qkv + moe + 2 * d,
+            "mamba": mamba + d,
+            "mamba_moe": mamba + moe + 2 * d,
+            "mlstm": mlstm + d,
+            "slstm": slstm + d,
+        }
+        total = sum(per_type[t] for t in self.pattern) * self.n_blocks
+        if self.encoder_layers:
+            total += self.encoder_layers * (qkv + mlp + 2 * d)
+            total += self.encoder_seq * d          # learned enc positions
+        total += self.vocab * d                    # embedding
+        if not self.tie_embeddings:
+            total += self.vocab * d                # lm head
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE uses top-k of experts)."""
+        if not self.moe_experts:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        dense_moe = self.moe_experts * 3 * d * ff
+        active_moe = self.moe_topk * 3 * d * ff
+        n_moe_layers = sum(1 for t in self.pattern if t.endswith("moe")) \
+            * self.n_blocks
+        return int(self.param_count() - n_moe_layers * (dense_moe - active_moe))
+
+    def hd_x(self) -> int:
+        """head dim for xLSTM cells (d_model / n_heads)."""
+        return self.d_model // self.n_heads
+
+    def reduced(self) -> "ArchConfig":
+        """Same family at CPU-smoke scale (tiny layers/width/vocab)."""
+        pat = self.pattern
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=2 * len(pat),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256,
+            moe_experts=min(self.moe_experts, 4) if self.moe_experts else 0,
+            moe_topk=min(self.moe_topk, 2) if self.moe_topk else 0,
+            # no capacity drops at smoke scale: keeps prefill/decode
+            # bit-consistent (drops are load-dependent, GShard semantics)
+            moe_capacity_factor=4.0 if self.moe_experts else 1.25,
+            encoder_layers=2 if self.encoder_layers else 0,
+            encoder_seq=16 if self.encoder_seq else 0,
+            vision_tokens=8 if self.vision_tokens else 0,
+            chunk=16,
+            ssm_state=8,
+            dtype="float32",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned to every LM arch)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_is_supported(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (skip noted in DESIGN.md)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: 500k dense decode skipped"
+    return True, ""

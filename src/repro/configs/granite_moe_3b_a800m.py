@@ -1,0 +1,11 @@
+"""Granite MoE 3B-a800m [hf:ibm-granite; hf] — 40 experts top-8.
+
+Per the brief: d_ff=512 is the per-expert hidden size; every layer is MoE.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, d_ff=512,
+    vocab=49155, rope_theta=1e4, pattern=("attn_moe",),
+    moe_experts=40, moe_topk=8)

@@ -1,0 +1,14 @@
+"""Jamba-1.5-large 398B [arXiv:2403.19887; hf] — Mamba+attn 1:7, MoE 16e top-2.
+
+Block of 8 layers: 1 attention + 7 mamba, MoE on every other layer
+(4 of 8), repeated 9x = 72 layers.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=24576,
+    vocab=65536, rope_theta=1e4,
+    pattern=("attn_moe", "mamba", "mamba_moe", "mamba",
+             "mamba_moe", "mamba", "mamba_moe", "mamba"),
+    moe_experts=16, moe_topk=2, ssm_state=16, chunk=256)

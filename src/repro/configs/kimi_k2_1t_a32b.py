@@ -1,0 +1,13 @@
+"""Kimi K2 1T-a32b [arXiv:2501.kimi2; unverified] — trillion-param MoE.
+
+61 layers, 384 experts top-8, per-expert d_ff=2048 (paper-table entry).
+Brief gives a uniform layer spec; we model all layers as attention+MoE
+(the released net keeps the first block dense — noted in DESIGN.md).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, d_ff=2048,
+    vocab=163840, head_dim=112, rope_theta=5e4, pattern=("attn_moe",),
+    moe_experts=384, moe_topk=8)

@@ -1,0 +1,12 @@
+"""Qwen2-VL-2B [arXiv:2409.12191; hf] — M-RoPE, dynamic resolution.
+
+Vision tower is a stub: 256 precomputed patch embeddings prefix the
+sequence; M-RoPE position ids (t/h/w streams) arrive as inputs.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b", family="vlm",
+    n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2, d_ff=8960,
+    vocab=151936, qkv_bias=True, rope_theta=1e6, pattern=("attn",),
+    vision_tokens=256, mrope=True)

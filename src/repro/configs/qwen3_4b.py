@@ -1,0 +1,8 @@
+"""Qwen3-4B [hf:Qwen/Qwen3-8B family; hf] — qk_norm, GQA."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-4b", family="dense",
+    n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8, d_ff=9728,
+    vocab=151936, qk_norm=True, head_dim=128, rope_theta=1e6,
+    pattern=("attn",))

@@ -1,0 +1,13 @@
+"""Whisper large-v3 [arXiv:2212.04356; unverified] — enc-dec, conv stub.
+
+Backbone only: 32 encoder + 32 decoder layers, d_model=1280, 20 heads
+(MHA: kv=20).  The conv frontend is a stub — input_specs() provides 1500
+precomputed frame embeddings.  Decoder layers add cross-attention.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3", family="audio",
+    n_layers=32, d_model=1280, n_heads=20, n_kv_heads=20, d_ff=5120,
+    vocab=51866, rope_theta=1e4, pattern=("attn_cross",),
+    encoder_layers=32, encoder_seq=1500)

@@ -1,0 +1,12 @@
+"""xLSTM 1.3B [arXiv:2405.04517; unverified] — sLSTM + mLSTM blocks (7:1).
+
+d_ff=0: xLSTM blocks carry their own 2x up-projection instead of an FFN.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab=50304, chunk=256,
+    pattern=("mlstm", "mlstm", "mlstm", "mlstm",
+             "mlstm", "mlstm", "mlstm", "slstm"))

@@ -1,0 +1,20 @@
+# The paper's primary contribution: the dwarf-based scalable benchmarking
+# methodology — eight dwarf components, DAG-like proxy benchmarks, the
+# profiler (HLO metric vector) and the auto-tuning tool.
+from .autotune import AutoTuner, TuneResult, autotune
+from .dag import Edge, ProxyDAG
+from .dwarfs import DWARFS, ComponentParams, get_component
+from .metrics import (HW_V5E, CostReport, HardwareSpec, Roofline,
+                      analyze_hlo_text, eq1_accuracy, metric_vector,
+                      roofline_from_report, vector_accuracy)
+from .profiler import WorkloadProfile, characterize, decompose_to_dwarfs
+from .proxy import ProxyBenchmark, proxy_from_dwarf_weights
+
+__all__ = [
+    "AutoTuner", "TuneResult", "autotune", "Edge", "ProxyDAG", "DWARFS",
+    "ComponentParams", "get_component", "HW_V5E", "CostReport",
+    "HardwareSpec", "Roofline", "analyze_hlo_text", "eq1_accuracy",
+    "metric_vector", "roofline_from_report", "vector_accuracy",
+    "WorkloadProfile", "characterize", "decompose_to_dwarfs",
+    "ProxyBenchmark", "proxy_from_dwarf_weights",
+]

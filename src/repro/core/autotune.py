@@ -1,0 +1,259 @@
+"""Auto-tuning tool (paper §2.3, Fig. 4): parameter initialization →
+adjusting stage (impact analysis / decision mechanism) → feedback stage.
+
+The paper "learns the impact of each parameter on all metrics and builds a
+decision tree" by changing one parameter at a time and re-executing.  We do
+the same with log-space elasticities: for each (edge, parameter) handle we
+probe a x2 change and record d(log metric)/d(log param) for every metric.
+The adjusting stage then picks, for the worst-deviating metric, the handle
+with the strongest corrective elasticity (penalizing collateral damage to
+already-satisfied metrics), computes the multiplicative step that the linear
+model predicts closes the gap, and the feedback stage re-measures.  Converged
+when every tracked metric deviates ≤ tol (paper default 15%).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .metrics import eq1_accuracy, vector_accuracy
+from .proxy import ProxyBenchmark
+
+# Structural (size-independent) metrics tuned without executing the proxy.
+# Rates (mips / mem_bw) follow once intensity and mix match; a second tuning
+# pass with execute=True can target them directly if needed.
+DEFAULT_METRICS = (
+    "arithmetic_intensity", "vpu_share",
+    "mix_dot", "mix_sort", "mix_gather_scatter", "mix_reduce",
+    "mix_rng", "mix_fft", "mix_logic", "mix_compare_select", "mix_elementwise",
+)
+
+DEFAULT_WEIGHTS = {"arithmetic_intensity": 3.0, "vpu_share": 1.5,
+                   "mix_dot": 2.0}
+
+_BOUNDS = {
+    "data_size": (256.0, float(1 << 26)),
+    "chunk_size": (8.0, float(1 << 20)),
+    "parallelism": (1.0, 256.0),
+    "weight": (0.0, 128.0),
+    "fraction": (0.05, 1.0),
+    "stride": (1.0, 64.0),
+}
+_EXTRA_BOUNDS = (1.0, float(1 << 22))   # centers, vertices, bins, groups, ...
+
+_INT_FIELDS = {"data_size", "chunk_size", "parallelism", "weight", "stride",
+               "centers", "vertices", "bins", "groups", "buckets", "hops",
+               "rounds", "levels", "k"}
+
+
+def _bounds(field: str):
+    return _BOUNDS.get(field, _EXTRA_BOUNDS)
+
+
+@dataclasses.dataclass
+class TuneStep:
+    iteration: int
+    worst_metric: str
+    deviation_before: float
+    handle: Tuple[int, str]
+    old_value: float
+    new_value: float
+    avg_accuracy_after: float
+
+
+@dataclasses.dataclass
+class TuneResult:
+    proxy: ProxyBenchmark
+    converged: bool
+    iterations: int
+    profiles_run: int
+    initial_accuracy: Dict[str, float]
+    final_accuracy: Dict[str, float]
+    history: List[TuneStep]
+    sensitivity: Dict[Tuple[int, str], Dict[str, float]]
+
+    def summary(self) -> str:
+        rows = [f"autotune[{self.proxy.name}]: converged={self.converged} "
+                f"iters={self.iterations} profiles={self.profiles_run} "
+                f"avg_acc {self.initial_accuracy.get('avg', 0):.3f} -> "
+                f"{self.final_accuracy.get('avg', 0):.3f}"]
+        for s in self.history:
+            rows.append(
+                f"  it{s.iteration:02d} worst={s.worst_metric}"
+                f"(dev {s.deviation_before:+.2f}) adjust edge{s.handle[0]}."
+                f"{s.handle[1]} {s.old_value:g}->{s.new_value:g}"
+                f" => avg_acc {s.avg_accuracy_after:.3f}")
+        return "\n".join(rows)
+
+
+def _is_share(k: str) -> bool:
+    return k.startswith("mix_") or k in ("vpu_share", "coll_share")
+
+
+def _deviations(target: Dict[str, float], proxy: Dict[str, float],
+                keys: Sequence[str]) -> Dict[str, float]:
+    """Share metrics deviate in absolute share points; others relatively."""
+    devs = {}
+    for k in keys:
+        h, p = target.get(k, 0.0), proxy.get(k, 0.0)
+        if _is_share(k):
+            devs[k] = p - h
+            continue
+        if abs(h) < 1e-12 and abs(p) < 1e-12:
+            continue
+        devs[k] = (p - h) / h if abs(h) > 1e-12 else math.inf
+    return devs
+
+
+class AutoTuner:
+    def __init__(self, target_metrics: Dict[str, float],
+                 metric_keys: Sequence[str] = DEFAULT_METRICS,
+                 tol: float = 0.15, max_iter: int = 40,
+                 execute: bool = False,
+                 weights: Optional[Dict[str, float]] = None):
+        self.target = target_metrics
+        self.keys = [k for k in metric_keys if abs(target_metrics.get(k, 0.0)) > 1e-12]
+        self.tol = tol
+        self.max_iter = max_iter
+        self.execute = execute
+        self.weights = dict(DEFAULT_WEIGHTS) if weights is None else weights
+        self.profiles_run = 0
+
+    # -- measurement ---------------------------------------------------------
+
+    def _measure(self, proxy: ProxyBenchmark) -> Dict[str, float]:
+        self.profiles_run += 1
+        prof = proxy.profile(execute=self.execute, exec_iters=1)
+        return prof.metrics
+
+    # -- impact analysis (the "decision tree" learning pass) ------------------
+
+    def _learn_sensitivity(self, proxy: ProxyBenchmark,
+                           base: Dict[str, float]
+                           ) -> Dict[Tuple[int, str], Dict[str, float]]:
+        table: Dict[Tuple[int, str], Dict[str, float]] = {}
+        for handle in proxy.dag.param_space():
+            i, field = handle
+            old = proxy.dag.get_param(i, field)
+            lo, hi = _bounds(field)
+            if old <= 0:   # pruned edge: probe re-enabling it
+                old = 1.0
+            probe = min(max(old * 2.0, lo), hi)
+            if probe == old:
+                probe = max(old / 2.0, lo)
+            if probe == old:
+                continue
+            trial = proxy.clone()
+            trial.dag.set_param(i, field, probe)
+            m = self._measure(trial)
+            dlogp = math.log(probe / old)
+            elast = {}
+            for k in self.keys:
+                b, t = base.get(k, 0.0), m.get(k, 0.0)
+                if _is_share(k):
+                    # share metrics: linear sensitivity d(share)/d(log p)
+                    elast[k] = (t - b) / dlogp
+                elif b > 1e-12 and t > 1e-12:
+                    elast[k] = math.log(t / b) / dlogp
+                elif b <= 1e-12 and t > 1e-12:
+                    elast[k] = 10.0   # parameter can *create* this metric
+                else:
+                    elast[k] = 0.0
+            table[handle] = elast
+        return table
+
+    # -- adjusting stage -------------------------------------------------------
+
+    def _pick_adjustment(self, sens, devs, satisfied, banned
+                         ) -> Optional[Tuple[str, Tuple[int, str], float]]:
+        """Pick (metric, handle, step-ratio): try metrics worst-first so a
+        banned/exhausted worst metric doesn't stall the whole loop."""
+        for worst in sorted(devs, key=lambda k: -abs(devs[k])):
+            if abs(devs[worst]) <= self.tol:
+                break
+            is_mix = _is_share(worst)
+            best_handle, best_score, best_ratio = None, 0.0, 1.0
+            for handle, elast in sens.items():
+                e = elast.get(worst, 0.0)
+                if abs(e) < (0.02 if is_mix else 0.05):
+                    continue
+                dev = devs[worst]
+                if is_mix:
+                    want = -dev / e                     # linear share model
+                else:
+                    want = -math.log1p(max(min(dev, 8.0), -0.95)) / e
+                direction = 1 if want > 0 else -1
+                if (handle, worst, direction) in banned:
+                    continue
+                collateral = sum(abs(elast.get(k, 0.0)) for k in satisfied)
+                score = abs(e) - 0.25 * collateral
+                if score > best_score:
+                    # big gaps may take up-to-x8 steps; damp by 0.8 vs model
+                    big = abs(dev) > (0.3 if is_mix else 0.75)
+                    cap = math.log(8.0) if big else math.log(2.0)
+                    ratio = math.exp(max(min(want * 0.8, cap), -cap))
+                    best_handle, best_score, best_ratio = handle, score, ratio
+            if best_handle is not None:
+                return worst, best_handle, best_ratio
+        return None
+
+    # -- main loop -------------------------------------------------------------
+
+    def tune(self, proxy: ProxyBenchmark) -> TuneResult:
+        proxy = proxy.clone()
+        base = self._measure(proxy)
+        init_acc = vector_accuracy(self.target, base, self.keys, self.weights)
+        sens = self._learn_sensitivity(proxy, base)
+        history: List[TuneStep] = []
+        best = (init_acc, proxy.clone())
+        banned: set = set()
+        cur = base
+        it = 0
+        for it in range(1, self.max_iter + 1):
+            devs = _deviations(self.target, cur, self.keys)
+            if not devs or all(abs(d) <= self.tol for d in devs.values()):
+                acc = vector_accuracy(self.target, cur, self.keys, self.weights)
+                return TuneResult(proxy, True, it - 1, self.profiles_run,
+                                  init_acc, acc, history, sens)
+            satisfied = [k for k, d in devs.items() if abs(d) <= self.tol]
+            pick = self._pick_adjustment(sens, devs, satisfied, banned)
+            if pick is None:
+                break
+            worst, (ei, field), ratio = pick
+            old = proxy.dag.get_param(ei, field)
+            lo, hi = _bounds(field)
+            new = min(max(max(old, lo if old <= 0 else old) * ratio, lo), hi)
+            if field in _INT_FIELDS:
+                new = float(round(new))
+            if new == old:
+                banned.add(((ei, field), worst, 1 if ratio > 1 else -1))
+                continue
+            acc_before = vector_accuracy(self.target, cur, self.keys,
+                                         self.weights)["avg"]
+            proxy.dag.set_param(ei, field, new)
+            cur_new = self._measure(proxy)          # feedback stage
+            acc = vector_accuracy(self.target, cur_new, self.keys, self.weights)
+            history.append(TuneStep(it, worst, devs[worst], (ei, field),
+                                    old, new, acc["avg"]))
+            if acc["avg"] < acc_before - 1e-6:
+                # regression: revert and prune this decision-tree branch
+                proxy.dag.set_param(ei, field, old)
+                banned.add(((ei, field), worst, 1 if ratio > 1 else -1))
+                continue
+            cur = cur_new
+            if acc["avg"] > best[0]["avg"]:
+                best = (acc, proxy.clone())
+        final_acc = vector_accuracy(self.target, cur, self.keys, self.weights)
+        if best[0]["avg"] > final_acc["avg"]:
+            final_acc, proxy = best
+        devs = _deviations(self.target, cur, self.keys)
+        converged = bool(devs) and all(abs(d) <= self.tol for d in devs.values())
+        return TuneResult(proxy, converged, it, self.profiles_run,
+                          init_acc, final_acc, history, sens)
+
+
+def autotune(proxy: ProxyBenchmark, target_metrics: Dict[str, float],
+             **kw) -> TuneResult:
+    return AutoTuner(target_metrics, **kw).tune(proxy)

@@ -1,0 +1,140 @@
+"""DAG-like combination of dwarf components (paper §2.1/§2.3).
+
+A node represents an original or intermediate data set; an edge represents a
+dwarf component applied with its own tunable parameters.  ``weight`` is the
+component's contribution — realized as a repeat count, so doubling a weight
+doubles that component's share of the proxy's cost channels (which is exactly
+what the auto-tuner exploits).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .dwarfs import ComponentParams, get_component
+from .dwarfs.base import fit_buffer
+
+
+@dataclasses.dataclass
+class Edge:
+    component: str                 # registry name of the dwarf component
+    src: Sequence[str]             # input node names (>=1, concatenated)
+    dst: str                       # output node name
+    params: ComponentParams = dataclasses.field(default_factory=ComponentParams)
+
+    def to_json(self) -> Dict:
+        p = self.params.rounded()
+        return {
+            "component": self.component, "src": list(self.src), "dst": self.dst,
+            "data_size": p.data_size, "chunk_size": p.chunk_size,
+            "parallelism": p.parallelism, "weight": p.weight,
+            "extra": dict(p.extra),
+        }
+
+
+@dataclasses.dataclass
+class ProxyDAG:
+    """Executable DAG of weighted dwarf components."""
+
+    name: str
+    sources: Dict[str, int]        # source node -> element count
+    edges: List[Edge]
+    sink: Optional[str] = None     # node reduced to the scalar output
+
+    # -- validation ----------------------------------------------------------
+
+    def validate(self) -> None:
+        known = set(self.sources)
+        for e in self.edges:
+            for s in e.src:
+                if s not in known:
+                    raise ValueError(
+                        f"edge {e.component}: input node {s!r} not yet defined "
+                        f"(DAG must be topologically ordered)")
+            known.add(e.dst)
+        if self.sink is not None and self.sink not in known:
+            raise ValueError(f"sink {self.sink!r} not produced by any edge")
+
+    # -- build ---------------------------------------------------------------
+
+    def build(self) -> Callable[[jax.Array], jnp.ndarray]:
+        """Returns a jit-able fn(rng) -> scalar executing the whole DAG."""
+        self.validate()
+        edges = [dataclasses.replace(e, params=e.params.rounded())
+                 for e in self.edges]
+        sources = dict(self.sources)
+        sink = self.sink
+
+        def run(rng: jax.Array) -> jnp.ndarray:
+            nodes: Dict[str, jnp.ndarray] = {}
+            for i, (sname, n) in enumerate(sorted(sources.items())):
+                nodes[sname] = jax.random.normal(
+                    jax.random.fold_in(rng, i), (int(n),), jnp.float32)
+            for ei, e in enumerate(edges):
+                comp = get_component(e.component)
+                xs = [nodes[s] for s in e.src]
+                x = xs[0] if len(xs) == 1 else jnp.concatenate(
+                    [fit_buffer(v, e.params.data_size) for v in xs])
+                if e.params.weight == 0:             # tuner pruned this edge
+                    out = fit_buffer(x, e.params.data_size)
+                else:
+                    out = x
+                    for w in range(e.params.weight):  # weight = repeat count
+                        r = jax.random.fold_in(rng, 10_000 + 131 * ei + w)
+                        out = comp(fit_buffer(out, e.params.data_size),
+                                   e.params, r)
+                if e.dst in nodes:
+                    prev = nodes[e.dst]
+                    nodes[e.dst] = prev + fit_buffer(out, prev.shape[0])
+                else:
+                    nodes[e.dst] = out
+            if sink is not None:
+                return jnp.sum(nodes[sink])
+            # default: reduce every terminal node
+            produced = {e.dst for e in edges}
+            consumed = {s for e in edges for s in e.src}
+            terminals = sorted(produced - consumed) or sorted(produced)
+            return sum(jnp.sum(nodes[t]) for t in terminals)
+
+        return run
+
+    # -- tuner plumbing --------------------------------------------------------
+
+    def get_param(self, edge_idx: int, field: str) -> float:
+        p = self.edges[edge_idx].params
+        return float(p.extra[field] if field in p.extra else getattr(p, field))
+
+    def set_param(self, edge_idx: int, field: str, value: float) -> None:
+        e = self.edges[edge_idx]
+        if field in e.params.extra:
+            e.params.extra[field] = value
+        else:
+            setattr(e.params, field, value)
+
+    def param_space(self) -> List[tuple]:
+        """(edge_idx, field) handles the auto-tuner may adjust (Table 2).
+
+        Numeric ``extra`` entries (centers, vertices, bins, ...) are exposed
+        too — they are per-component input-data-size parameters in the
+        paper's sense (e.g. the size of the centroid set).
+        """
+        out = []
+        for i, e in enumerate(self.edges):
+            for f in ("data_size", "chunk_size", "parallelism", "weight"):
+                out.append((i, f))
+            for k, v in e.params.extra.items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    out.append((i, k))
+        return out
+
+    def to_json(self) -> Dict:
+        return {
+            "name": self.name,
+            "sources": dict(self.sources),
+            "edges": [e.to_json() for e in self.edges],
+            "sink": self.sink,
+        }

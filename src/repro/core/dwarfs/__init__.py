@@ -1,0 +1,18 @@
+"""The eight big data dwarfs (paper §2.2) as JAX dwarf components.
+
+Importing this package populates the component registry with all dwarf
+components (paper Fig. 3): matrix, sampling, logic, transform, set, graph,
+sort, basic statistic.
+"""
+
+from .base import (REGISTRY, ComponentParams, DwarfComponent,
+                   components_of_dwarf, fit_buffer, get_component)
+from . import matrix, sampling, logic, transform, set_ops, graph, sort, statistic  # noqa: F401
+
+DWARFS = ("matrix", "sampling", "logic", "transform", "set", "graph", "sort",
+          "statistic")
+
+__all__ = [
+    "REGISTRY", "ComponentParams", "DwarfComponent", "components_of_dwarf",
+    "get_component", "fit_buffer", "DWARFS",
+]

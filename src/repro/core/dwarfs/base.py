@@ -1,0 +1,120 @@
+"""Dwarf component base: the paper's Table-2 tunable parameter set.
+
+Every component is a shape-static, jit-able transform over a flat f32 buffer.
+The four tunables map 1:1 to the paper (§2.3, Table 2):
+
+  * ``data_size``    — input data size for the component
+  * ``chunk_size``   — block processed "per thread" (tile/row length)
+  * ``parallelism``  — number of parallel lanes (vmap width / mesh shards)
+  * ``weight``       — contribution (repeat count) of the component in the DAG
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ComponentParams:
+    data_size: int = 1 << 14
+    chunk_size: int = 256
+    parallelism: int = 1
+    weight: int = 1
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def replace(self, **kw) -> "ComponentParams":
+        return dataclasses.replace(self, **kw)
+
+    def rounded(self) -> "ComponentParams":
+        """Clamp/round to legal values (tuner moves in continuous space)."""
+        data_size = int(max(256, min(self.data_size, 1 << 26)))
+        chunk = int(max(8, min(self.chunk_size, data_size)))
+        # keep chunks lane-friendly (multiples of 8; TPU-sublane aligned)
+        chunk = max(8, (chunk // 8) * 8)
+        par = int(max(1, min(self.parallelism, 256)))
+        weight = int(max(0, min(self.weight, 128)))
+        data_size = max(chunk, (data_size // chunk) * chunk)
+        return ComponentParams(data_size, chunk, par, weight, dict(self.extra))
+
+
+def fit_buffer(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Resize a flat buffer to n elements (tile or slice) — DAG glue."""
+    x = x.reshape(-1)
+    if x.shape[0] == n:
+        return x
+    if x.shape[0] > n:
+        return x[:n]
+    reps = -(-n // x.shape[0])
+    return jnp.tile(x, reps)[:n]
+
+
+def as_chunks(x: jnp.ndarray, p: ComponentParams) -> jnp.ndarray:
+    """View the buffer as (rows, chunk) — 'chunk per thread' layout."""
+    c = p.chunk_size
+    n = (x.shape[0] // c) * c
+    n = max(n, c)
+    x = fit_buffer(x, n)
+    return x.reshape(-1, c)
+
+
+def as_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic f32 -> u32 reinterpretation for logic/sort dwarfs."""
+    return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+
+
+def u32_to_f32(u: jnp.ndarray) -> jnp.ndarray:
+    """u32 -> well-behaved f32 in [0, 1) (avoids NaN-laden bitcasts)."""
+    return (u >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+
+
+class DwarfComponent:
+    """One dwarf component (paper Fig. 3): name + dwarf class + apply()."""
+
+    name: str = "abstract"
+    dwarf: str = "abstract"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams,
+              rng: jax.Array) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def __call__(self, x: jnp.ndarray, p: ComponentParams,
+                 rng: jax.Array) -> jnp.ndarray:
+        p = p.rounded()
+        x = fit_buffer(x, p.data_size)
+        if p.parallelism > 1:
+            rows = x.shape[0]
+            lanes = min(p.parallelism, max(1, rows // max(p.chunk_size, 8)))
+            if lanes > 1 and rows % lanes == 0:
+                xs = x.reshape(lanes, -1)
+                rngs = jax.random.split(rng, lanes)
+                sub = p.replace(data_size=rows // lanes, parallelism=1)
+                out = jax.vmap(lambda xi, ri: self.apply(xi, sub, ri))(xs, rngs)
+                return out.reshape(-1)
+        return self.apply(x, p, rng).reshape(-1)
+
+    def __repr__(self) -> str:
+        return f"<{self.dwarf}:{self.name}>"
+
+
+REGISTRY: Dict[str, DwarfComponent] = {}
+
+
+def register(cls):
+    inst = cls()
+    REGISTRY[inst.name] = inst
+    return cls
+
+
+def get_component(name: str) -> DwarfComponent:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown dwarf component {name!r}; "
+                       f"known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def components_of_dwarf(dwarf: str):
+    return [c for c in REGISTRY.values() if c.dwarf == dwarf]

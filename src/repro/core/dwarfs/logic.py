@@ -1,0 +1,70 @@
+"""Logic computation dwarf — hash / compression / encryption-style bit ops."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import (ComponentParams, DwarfComponent, as_u32, register,
+                   u32_to_f32)
+
+
+def _mix32(u: jnp.ndarray) -> jnp.ndarray:
+    """murmur3-style finalizer round (xor-shift-multiply avalanche)."""
+    u = u ^ (u >> 16)
+    u = u * jnp.uint32(0x85EBCA6B)
+    u = u ^ (u >> 13)
+    u = u * jnp.uint32(0xC2B2AE35)
+    u = u ^ (u >> 16)
+    return u
+
+
+@register
+class HashComputation(DwarfComponent):
+    name = "hash"
+    dwarf = "logic"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        rounds = int(p.extra.get("rounds", 4))
+        u = as_u32(x)
+        for _ in range(rounds):
+            u = _mix32(u)
+        return u32_to_f32(u)
+
+
+@register
+class EncryptionRounds(DwarfComponent):
+    """Feistel-network rounds over u32 pairs (TEA-like, add/shift/xor)."""
+
+    name = "encryption"
+    dwarf = "logic"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        rounds = int(p.extra.get("rounds", 4))
+        u = as_u32(x)
+        n2 = (u.shape[0] // 2) * 2
+        v0, v1 = u[:n2:2], u[1:n2:2]
+        k0, k1 = jnp.uint32(0x9E3779B9), jnp.uint32(0x7F4A7C15)
+        s = jnp.uint32(0)
+        for _ in range(rounds):
+            s = s + k0
+            v0 = v0 + (((v1 << 4) ^ (v1 >> 5)) + v1) ^ (s + k1)
+            v1 = v1 + (((v0 << 4) ^ (v0 >> 5)) + v0) ^ (s + k0)
+        out = jnp.stack([v0, v1], axis=1).reshape(-1)
+        return u32_to_f32(jnp.concatenate([out, u[n2:]]))
+
+
+@register
+class RLECompression(DwarfComponent):
+    """Run-length-style compression proxy: quantize + run-boundary flags."""
+
+    name = "compression"
+    dwarf = "logic"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        q = (as_u32(x) >> jnp.uint32(24)).astype(jnp.uint32)   # 8-bit symbols
+        boundary = jnp.concatenate(
+            [jnp.ones((1,), jnp.uint32), (q[1:] != q[:-1]).astype(jnp.uint32)])
+        run_id = jnp.cumsum(boundary)
+        packed = q ^ (run_id.astype(jnp.uint32) << jnp.uint32(8))
+        return u32_to_f32(_mix32(packed))

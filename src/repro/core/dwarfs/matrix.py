@@ -1,0 +1,69 @@
+"""Matrix computation dwarf — matmul, distance calculations (paper Fig. 3)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ComponentParams, DwarfComponent, as_chunks, fit_buffer, register
+
+
+@register
+class MatMul(DwarfComponent):
+    """Dense C = A @ B on (rows, chunk) x (chunk, chunk) — MXU-dominant."""
+
+    name = "matrix_multiplication"
+    dwarf = "matrix"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        a = as_chunks(x, p)                     # (m, c)
+        c = a.shape[1]
+        b = fit_buffer(x, c * c).reshape(c, c)  # weight tile from same data
+        out = a @ b
+        return out * (1.0 / c)                  # keep magnitudes bounded
+
+
+@register
+class MatrixConstruction(DwarfComponent):
+    """Outer-product construction A = u v^T (PageRank matrix build analog)."""
+
+    name = "matrix_construction"
+    dwarf = "matrix"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        a = as_chunks(x, p)
+        u = a.mean(axis=1)
+        v = a.mean(axis=0)
+        return a + 0.1 * jnp.outer(u, v)
+
+
+@register
+class EuclideanDistance(DwarfComponent):
+    """Pairwise point-to-centroid euclidean distances (Kmeans hotspot)."""
+
+    name = "euclidean_distance"
+    dwarf = "matrix"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        pts = as_chunks(x, p)                       # (n, d)
+        k = int(p.extra.get("centers", 16))
+        ctr = fit_buffer(x[::-1], k * pts.shape[1]).reshape(k, -1)
+        # ||a-b||^2 = ||a||^2 - 2 a.b + ||b||^2  -> dot-dominant
+        d2 = (jnp.sum(pts * pts, 1, keepdims=True)
+              - 2.0 * pts @ ctr.T + jnp.sum(ctr * ctr, 1))
+        return d2 * (1.0 / pts.shape[1])
+
+
+@register
+class CosineDistance(DwarfComponent):
+    name = "cosine_distance"
+    dwarf = "matrix"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        pts = as_chunks(x, p)
+        k = int(p.extra.get("centers", 16))
+        ctr = fit_buffer(x[::-1], k * pts.shape[1]).reshape(k, -1)
+        num = pts @ ctr.T
+        den = (jnp.linalg.norm(pts, axis=1, keepdims=True)
+               * jnp.linalg.norm(ctr, axis=1) + 1e-6)
+        return 1.0 - num / den

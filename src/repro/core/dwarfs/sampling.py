@@ -1,0 +1,52 @@
+"""Sampling computation dwarf — random & interval sampling (paper Fig. 3)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ComponentParams, DwarfComponent, fit_buffer, register
+
+
+@register
+class RandomSampling(DwarfComponent):
+    """Uniform random subsampling with replacement (RNG + gather)."""
+
+    name = "random_sampling"
+    dwarf = "sampling"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        n = x.shape[0]
+        frac = float(p.extra.get("fraction", 0.25))
+        m = max(1, int(n * frac))
+        idx = jax.random.randint(rng, (m,), 0, n)
+        return fit_buffer(x[idx], n)
+
+
+@register
+class IntervalSampling(DwarfComponent):
+    """Strided (systematic) sampling — TeraSort partitioner's sampler."""
+
+    name = "interval_sampling"
+    dwarf = "sampling"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        stride = int(p.extra.get("stride", 4))
+        s = x[::stride]
+        return fit_buffer(s, x.shape[0])
+
+
+@register
+class MonteCarlo(DwarfComponent):
+    """Monte-Carlo estimation (RNG-dominant): mean of f over random draws."""
+
+    name = "monte_carlo"
+    dwarf = "sampling"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        n = x.shape[0]
+        u = jax.random.uniform(rng, (n,))
+        v = jax.random.uniform(jax.random.fold_in(rng, 1), (n,))
+        inside = (u * u + v * v) < 1.0
+        est = inside.astype(jnp.float32).mean()
+        return x * 0.0 + est

@@ -1,0 +1,71 @@
+"""Set computation dwarf — intersection / union / Jaccard (paper Fig. 3)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import (ComponentParams, DwarfComponent, as_u32, register,
+                   u32_to_f32)
+
+
+def _keys(x: jnp.ndarray, buckets: int) -> jnp.ndarray:
+    return (as_u32(x) % jnp.uint32(buckets)).astype(jnp.uint32)
+
+
+@register
+class SetIntersection(DwarfComponent):
+    """Sorted-set intersection of the two buffer halves (searchsorted)."""
+
+    name = "set_intersection"
+    dwarf = "set"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        buckets = int(p.extra.get("buckets", 1 << 16))
+        keys = _keys(x, buckets)
+        h = keys.shape[0] // 2
+        a = jnp.sort(keys[:h])
+        b = jnp.sort(keys[h: 2 * h])
+        pos = jnp.searchsorted(b, a)
+        pos = jnp.clip(pos, 0, h - 1)
+        member = (b[pos] == a).astype(jnp.uint32)
+        out = jnp.concatenate([member * a, keys[2 * h:]])
+        return u32_to_f32(out << jnp.uint32(8))
+
+
+@register
+class JaccardSimilarity(DwarfComponent):
+    """|A∩B| / |A∪B| of the two halves — similarity-analysis kernel."""
+
+    name = "jaccard"
+    dwarf = "set"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        buckets = int(p.extra.get("buckets", 1 << 12))
+        keys = _keys(x, buckets)
+        h = keys.shape[0] // 2
+        a_mask = jnp.zeros((buckets,), jnp.bool_).at[keys[:h]].set(True)
+        b_mask = jnp.zeros((buckets,), jnp.bool_).at[keys[h: 2 * h]].set(True)
+        inter = jnp.sum(a_mask & b_mask)
+        union = jnp.sum(a_mask | b_mask)
+        sim = inter.astype(jnp.float32) / jnp.maximum(union, 1).astype(jnp.float32)
+        return x * 0.0 + sim
+
+
+@register
+class SetDifference(DwarfComponent):
+    """A \\ B via sorted membership test (Project/Filter analog)."""
+
+    name = "set_difference"
+    dwarf = "set"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        buckets = int(p.extra.get("buckets", 1 << 16))
+        keys = _keys(x, buckets)
+        h = keys.shape[0] // 2
+        a = keys[:h]
+        b = jnp.sort(keys[h: 2 * h])
+        pos = jnp.clip(jnp.searchsorted(b, a), 0, h - 1)
+        keep = (b[pos] != a)
+        out = jnp.where(keep, a, jnp.uint32(0))
+        return u32_to_f32(jnp.concatenate([out, keys[2 * h:]]) << jnp.uint32(8))

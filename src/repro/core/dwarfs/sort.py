@@ -1,0 +1,69 @@
+"""Sort computation dwarf — quick sort, merge sort, top-k, min/max."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ComponentParams, DwarfComponent, as_chunks, register
+
+
+@register
+class QuickSort(DwarfComponent):
+    """Full comparison sort per chunk row (XLA lowers to its sort network)."""
+
+    name = "quick_sort"
+    dwarf = "sort"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        rows = as_chunks(x, p)
+        return jnp.sort(rows, axis=1)
+
+
+@register
+class MergeSort(DwarfComponent):
+    """Sort row halves independently, then merge via rank interleave."""
+
+    name = "merge_sort"
+    dwarf = "sort"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        rows = as_chunks(x, p)
+        c = rows.shape[1]
+        h = c // 2
+        a = jnp.sort(rows[:, :h], axis=1)
+        b = jnp.sort(rows[:, h: 2 * h], axis=1)
+        # merge: position of each element = own rank + rank in other run
+        pa = jnp.arange(h) + jax.vmap(jnp.searchsorted)(b, a)
+        pb = jnp.arange(h) + jax.vmap(lambda bb, aa: jnp.searchsorted(aa, bb, side="right"))(b, a)
+        merged = jnp.zeros((rows.shape[0], 2 * h), rows.dtype)
+        merged = jax.vmap(lambda m, i, v: m.at[i].set(v))(merged, pa, a)
+        merged = jax.vmap(lambda m, i, v: m.at[i].set(v))(merged, pb, b)
+        if 2 * h < c:
+            merged = jnp.concatenate([merged, rows[:, 2 * h:]], axis=1)
+        return merged
+
+
+@register
+class TopK(DwarfComponent):
+    name = "top_k"
+    dwarf = "sort"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        rows = as_chunks(x, p)
+        k = min(int(p.extra.get("k", 32)), rows.shape[1])
+        vals, _ = jax.lax.top_k(rows, k)
+        reps = -(-rows.shape[1] // k)
+        return jnp.tile(vals, (1, reps))[:, : rows.shape[1]]
+
+
+@register
+class MinMaxCalc(DwarfComponent):
+    name = "min_max"
+    dwarf = "sort"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        rows = as_chunks(x, p)
+        mn = rows.min(axis=1, keepdims=True)
+        mx = rows.max(axis=1, keepdims=True)
+        return (rows - mn) / jnp.maximum(mx - mn, 1e-6)

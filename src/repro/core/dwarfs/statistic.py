@@ -1,0 +1,66 @@
+"""Basic statistic computation dwarf — count, average, histogram, probability."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ComponentParams, DwarfComponent, as_chunks, as_u32, register
+
+
+@register
+class CountAverage(DwarfComponent):
+    """Per-chunk count/mean/variance (cluster count & average, Kmeans)."""
+
+    name = "count_average"
+    dwarf = "statistic"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        rows = as_chunks(x, p)
+        mean = rows.mean(axis=1, keepdims=True)
+        var = rows.var(axis=1, keepdims=True)
+        return (rows - mean) / jnp.sqrt(var + 1e-6)
+
+
+@register
+class Histogram(DwarfComponent):
+    """Bucketize + bincount (word-count / TF-IDF style counting)."""
+
+    name = "histogram"
+    dwarf = "statistic"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        bins = int(p.extra.get("bins", 256))
+        idx = (as_u32(x) % jnp.uint32(bins)).astype(jnp.int32)
+        counts = jnp.zeros((bins,), jnp.float32).at[idx].add(1.0)
+        return counts[idx] * (1.0 / x.shape[0])
+
+
+@register
+class ProbabilityStats(DwarfComponent):
+    """Softmax-normalized probabilities + entropy (naive-bayes style)."""
+
+    name = "probability"
+    dwarf = "statistic"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        rows = as_chunks(x, p)
+        logp = jax.nn.log_softmax(rows, axis=1)
+        ent = -jnp.sum(jnp.exp(logp) * logp, axis=1, keepdims=True)
+        return logp + ent
+
+
+@register
+class DegreeCount(DwarfComponent):
+    """Grouped counting via segment-sum (out/in degree counting)."""
+
+    name = "grouped_count"
+    dwarf = "statistic"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        groups = int(p.extra.get("groups", 128))
+        gid = (as_u32(x) % jnp.uint32(groups)).astype(jnp.int32)
+        sums = jax.ops.segment_sum(x, gid, num_segments=groups)
+        cnts = jax.ops.segment_sum(jnp.ones_like(x), gid, num_segments=groups)
+        means = sums / jnp.maximum(cnts, 1.0)
+        return x - means[gid]

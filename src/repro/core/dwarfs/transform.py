@@ -1,0 +1,65 @@
+"""Transform computation dwarf — FFT / DCT / wavelet (paper Fig. 3)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ComponentParams, DwarfComponent, as_chunks, register
+
+
+@register
+class FFTTransform(DwarfComponent):
+    """rFFT -> spectrum magnitude -> irFFT round trip over chunks."""
+
+    name = "fft"
+    dwarf = "transform"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        rows = as_chunks(x, p)
+        spec = jnp.fft.rfft(rows, axis=1)
+        out = jnp.fft.irfft(spec * jnp.conj(spec), n=rows.shape[1], axis=1)
+        return out * (1.0 / rows.shape[1])
+
+
+@register
+class DCTTransform(DwarfComponent):
+    """DCT-II via FFT of the even extension (MPEG/SIFT frontends)."""
+
+    name = "dct"
+    dwarf = "transform"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        rows = as_chunks(x, p)
+        n = rows.shape[1]
+        ext = jnp.concatenate([rows, rows[:, ::-1]], axis=1)
+        spec = jnp.fft.rfft(ext, axis=1)[:, :n]
+        k = jnp.arange(n)
+        phase = jnp.exp(-1j * jnp.pi * k / (2 * n))
+        return jnp.real(spec * phase)
+
+
+@register
+class HaarWavelet(DwarfComponent):
+    """Multi-level Haar lifting (avg/diff butterflies)."""
+
+    name = "wavelet"
+    dwarf = "transform"
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
+        rows = as_chunks(x, p)
+        levels = int(p.extra.get("levels", 3))
+        n = rows.shape[1]
+        out = rows
+        width = n
+        for _ in range(levels):
+            if width < 2:
+                break
+            half = width // 2
+            a = out[:, : 2 * half: 2]
+            b = out[:, 1: 2 * half: 2]
+            avg = (a + b) * 0.70710678
+            diff = (a - b) * 0.70710678
+            out = jnp.concatenate([avg, diff, out[:, 2 * half:]], axis=1)
+            width = half
+        return out

@@ -1,0 +1,826 @@
+"""Metric vector, Eq.1 accuracy, roofline terms, and an HLO-text cost analyzer.
+
+This is the measurement substrate of the dwarf methodology (DESIGN.md §2): the
+paper compares proxy vs. original workloads on a perf-counter metric vector;
+our TPU-native analog is a roofline metric vector derived from the compiled
+XLA module.
+
+Why a custom HLO analyzer instead of ``compiled.cost_analysis()``: XLA's cost
+analysis visits each computation once, so a ``lax.scan``/``while`` body is
+counted a single time regardless of trip count.  Every model here scans over
+layers (and SSMs scan over sequence chunks), which would undercount FLOPs,
+bytes, and collective traffic by 20-70x.  We parse ``compiled.as_text()``,
+build the call graph, and multiply ``while`` bodies by their
+``known_trip_count`` (with a condition-constant fallback).
+
+All costs are *per device* (the compiled module is post-SPMD-partitioning);
+global = per-device x num_devices for a balanced program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e-class target; per system brief)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12  # per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per link
+    hbm_bytes: float = 16e9          # per chip
+
+
+HW_V5E = HardwareSpec()
+
+DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "f8e8m0fnu": 1, "f4e2m1fn": 0.5,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0, "s1": 0.125, "u1": 0.125,
+}
+
+# Transcendental elementwise ops get a higher VPU weight (XLA convention ~ 4-10)
+_TRANSCENDENTAL = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "sine", "cosine", "tan", "power", "sqrt", "rsqrt", "cbrt", "erf",
+    "atan2", "logistic",
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "remainder", "is-finite", "real", "imag", "complex",
+    "stochastic-convert",
+} | _TRANSCENDENTAL
+
+_LOGIC = {
+    "and", "or", "xor", "not", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "popcnt", "count-leading-zeros",
+}
+
+_COMPARE = {"compare", "select", "clamp"}
+
+_GATHER_SCATTER = {
+    "gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+}
+
+_REDUCE = {"reduce", "reduce-window", "select-and-scatter", "map", "iota_reduce"}
+
+_DATA_MOVEMENT = {
+    "copy", "broadcast", "reshape", "transpose", "convert", "slice",
+    "concatenate", "pad", "reverse", "iota", "reduce-precision", "copy-start",
+    "copy-done", "bitcast-convert",
+}
+
+COLLECTIVE_OPS = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+    "all-gather-start", "all-reduce-start", "collective-permute-start",
+}
+
+_COLLECTIVE_CANON = {
+    "all-gather-start": "all-gather",
+    "all-reduce-start": "all-reduce",
+    "collective-permute-start": "collective-permute",
+    "ragged-all-to-all": "all-to-all",
+}
+
+_SKIP_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "all-gather-done",
+    "all-reduce-done", "collective-permute-done", "opt-barrier", "domain",
+    "add-dependency",
+}
+
+# HLO op class -> dwarf attribution (profiler uses this to seed proxy weights)
+OP_CLASS_TO_DWARF = {
+    "dot": "matrix",
+    "convolution": "matrix",
+    "fft": "transform",
+    "sort": "sort",
+    "rng": "sampling",
+    "gather_scatter": "graph",
+    "reduce": "statistic",
+    "logic": "logic",
+    "compare_select": "set",
+    "elementwise": "matrix_elementwise",  # folded into matrix/statistic later
+    "data_movement": None,
+    "collective": None,
+    "other": None,
+}
+
+
+# ---------------------------------------------------------------------------
+# Shape parsing
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,\s]*)\]")
+
+
+def _parse_single_shape(tok: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _SHAPE_RE.match(tok.strip())
+    if not m:
+        return ("opaque", ())
+    dtype = m.group(1)
+    dims_s = m.group(2).strip()
+    dims = tuple(int(d) for d in dims_s.split(",")) if dims_s else ()
+    return (dtype, dims)
+
+
+def parse_shapes(tok: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Parse an HLO shape string (possibly a tuple) to [(dtype, dims), ...]."""
+    tok = tok.strip()
+    if tok.startswith("("):
+        inner = tok[1:-1] if tok.endswith(")") else tok[1:]
+        shapes = []
+        for m in _SHAPE_RE.finditer(inner):
+            dims_s = m.group(2).strip()
+            dims = tuple(int(d) for d in dims_s.split(",")) if dims_s else ()
+            shapes.append((m.group(1), dims))
+        return shapes
+    return [_parse_single_shape(tok)]
+
+
+def shape_bytes(shapes: List[Tuple[str, Tuple[int, ...]]]) -> float:
+    total = 0.0
+    for dtype, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def shape_elems(shapes: List[Tuple[str, Tuple[int, ...]]]) -> float:
+    total = 0.0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class HloInstruction:
+    name: str
+    opcode: str
+    shapes: List[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    attrs: str  # raw remainder of the line after the operand list
+
+    @property
+    def out_bytes(self) -> float:
+        return shape_bytes(self.shapes)
+
+    @property
+    def out_elems(self) -> float:
+        return shape_elems(self.shapes)
+
+
+@dataclasses.dataclass
+class HloComputation:
+    name: str
+    instructions: List[HloInstruction]
+    by_name: Dict[str, HloInstruction]
+
+
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^\s*([a-z][\w\-]*)\s*\(")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_shape_and_rest(rhs: str) -> Tuple[str, str]:
+    """Split '<shape> opcode(...)...' into (shape_token, rest)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, c in enumerate(rhs):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[: i + 1], rhs[i + 1:].strip()
+        return rhs, ""
+    m = re.match(r"^([a-z][a-z0-9]*\[[^\]]*\](?:\{[^}]*\})?)\s+(.*)$", rhs)
+    if m:
+        return m.group(1), m.group(2)
+    # scalar like 'f32[]' handled above; fall back
+    parts = rhs.split(None, 1)
+    return parts[0], parts[1] if len(parts) > 1 else ""
+
+
+def _extract_operands(rest: str) -> Tuple[str, List[str], str]:
+    """From 'opcode(...), attrs' return (opcode, operand names, attrs)."""
+    m = _OPCODE_RE.match(rest)
+    if not m:
+        return rest.split("(")[0].strip(), [], ""
+    opcode = m.group(1)
+    start = rest.index("(", m.start(1))
+    depth = 0
+    end = start
+    for i in range(start, len(rest)):
+        c = rest[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operand_str = rest[start + 1: end]
+    attrs = rest[end + 1:]
+    if opcode == "constant":
+        return opcode, [], attrs
+    operands = _OPERAND_NAME_RE.findall(operand_str)
+    return opcode, operands, attrs
+
+
+def parse_hlo_module(text: str) -> Tuple[Dict[str, HloComputation], Optional[str]]:
+    computations: Dict[str, HloComputation] = {}
+    entry: Optional[str] = None
+    cur_name: Optional[str] = None
+    cur_instrs: List[HloInstruction] = []
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if cur_name is None:
+            mh = _COMP_HEADER_RE.match(line.strip())
+            if mh:
+                cur_name = mh.group(2)
+                cur_instrs = []
+                if mh.group(1):
+                    entry = cur_name
+            continue
+        if line.strip() == "}":
+            computations[cur_name] = HloComputation(
+                cur_name, cur_instrs, {i.name: i for i in cur_instrs})
+            cur_name = None
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        shape_tok, rest = _split_shape_and_rest(rhs)
+        opcode, operands, attrs = _extract_operands(rest)
+        cur_instrs.append(
+            HloInstruction(name, opcode, parse_shapes(shape_tok), operands, attrs))
+    return computations, entry
+
+
+# ---------------------------------------------------------------------------
+# Cost analysis with trip-count correction
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CostReport:
+    """Per-device cost of one compiled program."""
+
+    flops: float = 0.0                # MXU flops (dot/conv/fft-equivalent)
+    vpu_ops: float = 0.0              # weighted elementwise lane-ops
+    bytes_accessed: float = 0.0       # HBM traffic estimate
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_count: Dict[str, float] = dataclasses.field(default_factory=dict)
+    op_mix: Dict[str, float] = dataclasses.field(default_factory=dict)
+    op_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    while_trip_counts: List[int] = dataclasses.field(default_factory=list)
+    rng_elems: float = 0.0
+    sort_elems: float = 0.0
+    fft_elems: float = 0.0
+    gather_elems: float = 0.0
+    reduce_elems: float = 0.0
+    logic_elems: float = 0.0
+    compare_elems: float = 0.0
+    elementwise_elems: float = 0.0
+    dot_bytes: float = 0.0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.bytes_accessed, 1.0)
+
+    def add(self, other: "CostReport", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.vpu_ops += other.vpu_ops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v * mult
+        for k, v in other.collective_count.items():
+            self.collective_count[k] = self.collective_count.get(k, 0.0) + v * mult
+        for k, v in other.op_mix.items():
+            self.op_mix[k] = self.op_mix.get(k, 0.0) + v * mult
+        for k, v in other.op_bytes.items():
+            self.op_bytes[k] = self.op_bytes.get(k, 0.0) + v * mult
+        self.while_trip_counts.extend(other.while_trip_counts)
+        for f in ("rng_elems", "sort_elems", "fft_elems", "gather_elems",
+                  "reduce_elems", "logic_elems", "compare_elems",
+                  "elementwise_elems", "dot_bytes"):
+            setattr(self, f, getattr(self, f) + getattr(other, f) * mult)
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["total_collective_bytes"] = self.total_collective_bytes
+        d["arithmetic_intensity"] = self.arithmetic_intensity
+        return d
+
+
+def classify_opcode(opcode: str) -> str:
+    if opcode in ("dot",):
+        return "dot"
+    if opcode.startswith("convolution"):
+        return "convolution"
+    if opcode == "fft":
+        return "fft"
+    if opcode == "sort":
+        return "sort"
+    if opcode.startswith("rng"):
+        return "rng"
+    if opcode in _GATHER_SCATTER:
+        return "gather_scatter"
+    if opcode in _REDUCE:
+        return "reduce"
+    if opcode in _LOGIC:
+        return "logic"
+    if opcode in _COMPARE:
+        return "compare_select"
+    if opcode in _ELEMENTWISE:
+        return "elementwise"
+    if opcode in COLLECTIVE_OPS:
+        return "collective"
+    if opcode in _DATA_MOVEMENT:
+        return "data_movement"
+    return "other"
+
+
+class HloCostAnalyzer:
+    """Walks the HLO call graph, multiplying while-bodies by trip counts.
+
+    ``vmem_bytes``: when > 0, tensors inside loop bodies whose per-iteration
+    traffic fits this budget are treated as VMEM-resident (not HBM traffic).
+    This models the TPU execution of blocked kernels — the Pallas
+    flash-attention kernel keeps exactly these block temporaries (scores,
+    running max/sum) in VMEM scratch; the CPU HLO materializes them.  The
+    default (0) is the pessimistic un-fused bound.
+    """
+
+    def __init__(self, text: str, vmem_bytes: float = 0.0):
+        self.computations, self.entry = parse_hlo_module(text)
+        self.vmem_bytes = vmem_bytes
+        self._memo: Dict[Tuple[str, bool, bool], CostReport] = {}
+
+    # -- per-instruction costs ------------------------------------------------
+
+    def _operand_shapes(self, comp: HloComputation, instr: HloInstruction,
+                        idx: int) -> Optional[List[Tuple[str, Tuple[int, ...]]]]:
+        if idx >= len(instr.operands):
+            return None
+        op = comp.by_name.get(instr.operands[idx])
+        return op.shapes if op is not None else None
+
+    def _io_bytes(self, comp: HloComputation, instr: HloInstruction) -> float:
+        """HBM traffic of one instruction — touched bytes, not operand sizes.
+
+        Slicing ops read only the slice; in-place updates (DUS/scatter with
+        donated buffers) touch only the updated region.  Counting full
+        operands would charge a 32k-entry KV cache for every decode step.
+        """
+        op = instr.opcode
+
+        def operand_bytes(i):
+            o = comp.by_name.get(instr.operands[i]) if i < len(instr.operands) else None
+            return o.out_bytes if o is not None and o.opcode != "constant" else 0.0
+
+        if op in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * instr.out_bytes               # read slice + write out
+        if op == "dynamic-update-slice":
+            return 3.0 * operand_bytes(1)              # r/w region + update
+        if op == "scatter":
+            return 3.0 * operand_bytes(2) if len(instr.operands) >= 3 \
+                else 3.0 * instr.out_bytes
+        total = instr.out_bytes
+        for i in range(len(instr.operands)):
+            total += operand_bytes(i)
+        return total
+
+    def _fusion_operand_bytes(self, comp: HloComputation,
+                              instr: HloInstruction) -> float:
+        """Bytes a fusion reads: parameters consumed only via slicing ops
+        count the slice sizes; everything else counts the full operand."""
+        mcall = _CALLS_RE.search(instr.attrs)
+        body = self.computations.get(mcall.group(1)) if mcall else None
+        total = instr.out_bytes
+        if body is None:
+            return total + sum(
+                (comp.by_name[o].out_bytes
+                 if o in comp.by_name and comp.by_name[o].opcode != "constant"
+                 else 0.0) for o in instr.operands)
+        # map param index -> its uses inside the body
+        params = [bi for bi in body.instructions if bi.opcode == "parameter"]
+        consumers: Dict[str, List[HloInstruction]] = {}
+        for bi in body.instructions:
+            for oname in bi.operands:
+                consumers.setdefault(oname, []).append(bi)
+        for pi, p in enumerate(params):
+            if pi >= len(instr.operands):
+                break
+            o = comp.by_name.get(instr.operands[pi])
+            full = o.out_bytes if o is not None and o.opcode != "constant" else 0.0
+            uses = consumers.get(p.name, [])
+            if uses and all(u.opcode in ("dynamic-slice", "slice", "gather",
+                                         "dynamic-update-slice")
+                            for u in uses):
+                touched = 0.0
+                for u in uses:
+                    if u.opcode == "dynamic-update-slice":
+                        upd = body.by_name.get(u.operands[1]) \
+                            if len(u.operands) > 1 else None
+                        touched += 2.0 * (upd.out_bytes if upd else 0.0)
+                    else:
+                        touched += u.out_bytes
+                total += min(full, touched)
+            else:
+                total += full
+        return total
+
+    def _dot_flops(self, comp: HloComputation, instr: HloInstruction) -> float:
+        out_elems = instr.out_elems
+        lhs = self._operand_shapes(comp, instr, 0)
+        m = re.search(r"lhs_contracting_dims=\{([\d,\s]*)\}", instr.attrs)
+        contract = 1.0
+        if lhs and m and m.group(1).strip():
+            dims = lhs[0][1]
+            for d in m.group(1).split(","):
+                di = int(d)
+                if di < len(dims):
+                    contract *= dims[di]
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(self, comp: HloComputation, instr: HloInstruction) -> float:
+        out_elems = instr.out_elems
+        m = re.search(r"window=\{size=([\dx]+)", instr.attrs)
+        win = 1.0
+        if m:
+            for d in m.group(1).split("x"):
+                win *= int(d)
+        # depthwise-vs-dense distinction via feature_group_count
+        rhs = self._operand_shapes(comp, instr, 1)
+        in_feat = rhs[0][1][-2] if rhs and len(rhs[0][1]) >= 2 else 1
+        return 2.0 * out_elems * win * max(in_feat, 1)
+
+    def _fft_flops(self, instr: HloInstruction) -> float:
+        m = re.search(r"fft_length=\{([\d,\s]+)\}", instr.attrs)
+        n = 1.0
+        if m:
+            for d in m.group(1).split(","):
+                n *= int(d)
+        batch = max(instr.out_elems / max(n, 1.0), 1.0)
+        return 5.0 * batch * n * max(math.log2(max(n, 2.0)), 1.0)
+
+    # -- computation walk -----------------------------------------------------
+
+    def _trip_count(self, instr: HloInstruction) -> int:
+        m = _TRIP_RE.search(instr.attrs)
+        if m:
+            return int(m.group(1))
+        mc = _COND_RE.search(instr.attrs)
+        if mc and mc.group(1) in self.computations:
+            consts = []
+            for ci in self.computations[mc.group(1)].instructions:
+                if ci.opcode == "constant":
+                    mm = _CONST_INT_RE.search(ci.attrs) or _CONST_INT_RE.search(
+                        "constant(" + ci.attrs + ")")
+                    if mm:
+                        consts.append(int(mm.group(1)))
+            if consts:
+                return max(consts)
+        return 1
+
+    def analyze_computation(self, name: str, count_bytes: bool = True,
+                            in_loop: bool = False) -> CostReport:
+        key = (name, count_bytes, in_loop)
+        if key in self._memo:
+            return self._memo[key]
+        report = CostReport()
+        comp = self.computations.get(name)
+        if comp is None:
+            self._memo[key] = report
+            return report
+        for instr in comp.instructions:
+            op = instr.opcode
+            if op in _SKIP_OPS:
+                continue
+            cls = classify_opcode(op)
+            if op not in ("while", "call", "conditional", "async-start", "fusion"):
+                report.op_mix[cls] = report.op_mix.get(cls, 0.0) + 1.0
+            operand_bytes = 0.0
+            for oname in instr.operands:
+                o = comp.by_name.get(oname)
+                if o is not None and o.opcode != "constant":
+                    operand_bytes += o.out_bytes
+            io_bytes = self._io_bytes(comp, instr)
+
+            if op == "while":
+                trips = self._trip_count(instr)
+                report.while_trip_counts.append(trips)
+                mb = _CALLS_RE.search(instr.attrs)
+                if mb:
+                    body = self.analyze_computation(mb.group(1), count_bytes,
+                                                    in_loop=True)
+                    report.add(body, float(trips))
+                mc = _COND_RE.search(instr.attrs)
+                if mc:
+                    cond = self.analyze_computation(mc.group(1), count_bytes,
+                                                    in_loop=True)
+                    report.add(cond, float(trips))
+                continue
+            if op == "fusion":
+                # memory traffic at the fusion boundary only; flops from body
+                if count_bytes:
+                    fb = self._fusion_operand_bytes(comp, instr)
+                    if not (in_loop and self.vmem_bytes > 0
+                            and fb <= self.vmem_bytes):
+                        report.bytes_accessed += fb
+                        report.op_bytes[cls] = report.op_bytes.get(cls, 0.0) + fb
+                mcall = _CALLS_RE.search(instr.attrs)
+                if mcall:
+                    body = self.analyze_computation(mcall.group(1), count_bytes=False)
+                    report.add(body, 1.0)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                mcall = _CALLS_RE.search(instr.attrs)
+                if mcall:
+                    body = self.analyze_computation(mcall.group(1), count_bytes,
+                                                    in_loop=in_loop)
+                    report.add(body, 1.0)
+                continue
+
+            if count_bytes and not (in_loop and self.vmem_bytes > 0
+                                    and op not in COLLECTIVE_OPS
+                                    and io_bytes <= self.vmem_bytes):
+                report.bytes_accessed += io_bytes
+                report.op_bytes[cls] = report.op_bytes.get(cls, 0.0) + io_bytes
+
+            if op in COLLECTIVE_OPS:
+                canon = _COLLECTIVE_CANON.get(op, op)
+                report.collective_bytes[canon] = (
+                    report.collective_bytes.get(canon, 0.0) + operand_bytes)
+                report.collective_count[canon] = (
+                    report.collective_count.get(canon, 0.0) + 1.0)
+            elif op == "dot":
+                f = self._dot_flops(comp, instr)
+                report.flops += f
+                report.dot_bytes += io_bytes
+            elif op.startswith("convolution"):
+                report.flops += self._conv_flops(comp, instr)
+            elif op == "fft":
+                f = self._fft_flops(instr)
+                report.flops += f
+                report.fft_elems += instr.out_elems
+            elif op == "sort":
+                n = instr.out_elems
+                report.sort_elems += n
+                report.vpu_ops += n * max(math.log2(max(n, 2.0)), 1.0)
+            elif op.startswith("rng"):
+                report.rng_elems += instr.out_elems
+                report.vpu_ops += instr.out_elems * 4
+            elif cls == "gather_scatter":
+                report.gather_elems += instr.out_elems
+            elif cls == "reduce":
+                report.reduce_elems += operand_bytes / 4.0
+                report.vpu_ops += operand_bytes / 4.0
+            elif cls == "logic":
+                report.logic_elems += instr.out_elems
+                report.vpu_ops += instr.out_elems
+            elif cls == "compare_select":
+                report.compare_elems += instr.out_elems
+                report.vpu_ops += instr.out_elems
+            elif cls == "elementwise":
+                w = 8.0 if op in _TRANSCENDENTAL else 1.0
+                report.elementwise_elems += instr.out_elems
+                report.vpu_ops += instr.out_elems * w
+            # reduce's to_apply bodies are per-element lambdas; already counted
+        self._memo[key] = report
+        return report
+
+    def analyze(self) -> CostReport:
+        if self.entry is None:
+            # fall back: largest computation
+            if not self.computations:
+                return CostReport()
+            self.entry = max(self.computations.values(),
+                             key=lambda c: len(c.instructions)).name
+        return self.analyze_computation(self.entry)
+
+
+def analyze_hlo_text(text: str, vmem_bytes: float = 0.0) -> CostReport:
+    return HloCostAnalyzer(text, vmem_bytes=vmem_bytes).analyze()
+
+
+# ---------------------------------------------------------------------------
+# Metric vector + Equation (1) accuracy
+# ---------------------------------------------------------------------------
+
+METRIC_KEYS = (
+    "flops", "vpu_ops", "bytes_accessed", "arithmetic_intensity",
+    "mix_dot", "mix_elementwise", "mix_reduce", "mix_gather_scatter",
+    "mix_sort", "mix_fft", "mix_rng", "mix_logic", "mix_compare_select",
+    "collective_bytes", "host_bytes",
+)
+
+
+def elem_channels(report: CostReport) -> Dict[str, float]:
+    """Dynamic 'instruction count' per op class = element-ops executed.
+
+    This is the analog of the paper's instruction-mix breakdown (Fig. 6):
+    the *fraction of executed work* per instruction class, not the static
+    HLO op count (a 1-element add and a 4M-element dot are not one each).
+    """
+    return {
+        "dot": report.flops / 2.0,
+        "elementwise": report.elementwise_elems,
+        "reduce": report.reduce_elems,
+        "gather_scatter": report.gather_elems,
+        "sort": report.sort_elems,
+        "fft": report.fft_elems,
+        "rng": report.rng_elems,
+        "logic": report.logic_elems,
+        "compare_select": report.compare_elems,
+    }
+
+
+def metric_vector(report: CostReport, host_bytes: float = 0.0,
+                  exec_time: float = 0.0) -> Dict[str, float]:
+    """The TPU-native analog of the paper's Table-5 metric vector.
+
+    Size-independent metrics (ratios + rates) are what proxy accuracy is
+    judged on — exactly like the paper's IPC / MIPS / mix% / MB/s — since a
+    proxy is ~100x smaller than the original by design.  Absolute totals
+    (flops, bytes) are kept for roofline work but are not accuracy metrics.
+    """
+    channels = elem_channels(report)
+    total = sum(channels.values()) or 1.0
+    vec = {
+        # --- absolute totals (roofline / debugging; not accuracy metrics)
+        "flops": report.flops,
+        "vpu_ops": report.vpu_ops,
+        "bytes_accessed": report.bytes_accessed,
+        "collective_bytes": report.total_collective_bytes,
+        "host_bytes": host_bytes,
+        # --- ratios (cache-behaviour analogs)
+        "arithmetic_intensity": report.arithmetic_intensity,
+        "vpu_share": report.vpu_ops / max(report.vpu_ops + report.flops, 1.0),
+        "coll_share": report.total_collective_bytes / max(report.bytes_accessed, 1.0),
+    }
+    for cls, v in channels.items():
+        vec[f"mix_{cls}"] = v / total
+    if exec_time:
+        # --- rates (IPC/MIPS/bandwidth analogs; need real execution)
+        vec["exec_time"] = exec_time
+        vec["mips"] = total / exec_time                   # elem-ops / s
+        vec["flop_rate"] = report.flops / exec_time       # FLOP / s
+        vec["mem_bw"] = report.bytes_accessed / exec_time  # B / s
+        if host_bytes:
+            vec["io_bw"] = host_bytes / exec_time         # disk-I/O analog
+    return vec
+
+
+#: size-independent keys used for proxy-accuracy reporting (Fig. 5 analog)
+REPORT_METRICS = (
+    "arithmetic_intensity", "vpu_share",
+    "mix_dot", "mix_elementwise", "mix_reduce", "mix_gather_scatter",
+    "mix_sort", "mix_fft", "mix_rng", "mix_logic", "mix_compare_select",
+    "mips", "flop_rate", "mem_bw",
+)
+
+
+def eq1_accuracy(val_h: float, val_p: float) -> float:
+    """Equation (1) of the paper: 1 - |(p - h) / h|, clipped to [0, 1]."""
+    if abs(val_h) < 1e-12:
+        return 1.0 if abs(val_p) < 1e-12 else 0.0
+    return float(max(0.0, 1.0 - abs((val_p - val_h) / val_h)))
+
+
+def metric_accuracy(key: str, val_h: float, val_p: float) -> float:
+    """Eq.1 for magnitude metrics; share-point accuracy for mix_* metrics.
+
+    The paper reads its instruction-mix figure (Fig. 6) in percentage
+    points ("44% vs 46% integer instructions"), so mix metrics compare as
+    1 - |share_p - share_h| rather than relatively — a relative error on a
+    0.1% share would be meaningless noise.
+    """
+    if key.startswith("mix_") or key in ("vpu_share", "coll_share"):
+        return float(max(0.0, 1.0 - abs(val_p - val_h)))
+    return eq1_accuracy(val_h, val_p)
+
+
+def vector_accuracy(target: Dict[str, float], proxy: Dict[str, float],
+                    keys: Optional[List[str]] = None,
+                    weights: Optional[Dict[str, float]] = None) -> Dict[str, float]:
+    """Per-metric accuracy + weighted average ('avg')."""
+    if keys is None:
+        keys = [k for k in target
+                if k in proxy and not (abs(target[k]) < 1e-12 and abs(proxy[k]) < 1e-12)]
+    accs = {}
+    wsum, asum = 0.0, 0.0
+    for k in keys:
+        if k not in target or k not in proxy:
+            continue
+        a = metric_accuracy(k, target[k], proxy[k])
+        accs[k] = a
+        w = (weights or {}).get(k, 1.0)
+        wsum += w
+        asum += a * w
+    accs["avg"] = asum / max(wsum, 1e-12)
+    return accs
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one (arch x shape x mesh) cell (per-chip)."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    hlo_flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops: float = 0.0          # analytic global (6ND etc.)
+    chips: int = 1
+    useful_flops_ratio: float = 0.0   # model_flops / (hlo_flops * chips)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound: bounded below by the dominant term."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """dominant-term share: compute_s / step_time — 1.0 = compute-bound at peak."""
+        return self.compute_s / max(self.step_time_s, 1e-30)
+
+    @property
+    def mfu(self) -> float:
+        """Model-flops utilisation at the no-overlap bound."""
+        if self.model_flops <= 0:
+            return 0.0
+        return (self.model_flops / (self.chips * HW_V5E.peak_flops_bf16)) / max(
+            self.step_time_s, 1e-30)
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["step_time_s"] = self.step_time_s
+        d["roofline_fraction"] = self.roofline_fraction
+        d["mfu"] = self.mfu
+        return d
+
+
+def roofline_from_report(report: CostReport, chips: int,
+                         model_flops: float = 0.0,
+                         hw: HardwareSpec = HW_V5E) -> Roofline:
+    compute_s = report.flops / hw.peak_flops_bf16
+    memory_s = report.bytes_accessed / hw.hbm_bw
+    collective_s = report.total_collective_bytes / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops / max(report.flops * chips, 1.0) if model_flops else 0.0
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, hlo_flops_per_chip=report.flops,
+        bytes_per_chip=report.bytes_accessed,
+        collective_bytes_per_chip=report.total_collective_bytes,
+        model_flops=model_flops, chips=chips, useful_flops_ratio=useful)

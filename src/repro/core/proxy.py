@@ -1,0 +1,85 @@
+"""ProxyBenchmark — a tunable, DAG-structured stand-in for a workload."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+import jax
+
+from .dag import Edge, ProxyDAG
+from .dwarfs import ComponentParams, components_of_dwarf
+from .profiler import WorkloadProfile, characterize
+
+
+@dataclasses.dataclass
+class ProxyBenchmark:
+    dag: ProxyDAG
+    description: str = ""
+
+    @property
+    def name(self) -> str:
+        return self.dag.name
+
+    def profile(self, execute: bool = True, exec_iters: int = 3,
+                host_bytes: float = 0.0) -> WorkloadProfile:
+        fn = self.dag.build()
+        rng = jax.random.PRNGKey(0)
+        return characterize(fn, (rng,), name=self.name, execute=execute,
+                            exec_iters=exec_iters, host_bytes=host_bytes)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.dag.to_json(), f, indent=2)
+
+    def clone(self) -> "ProxyBenchmark":
+        dag = ProxyDAG(
+            name=self.dag.name,
+            sources=dict(self.dag.sources),
+            edges=[Edge(e.component, list(e.src), e.dst,
+                        dataclasses.replace(e.params,
+                                            extra=dict(e.params.extra)))
+                   for e in self.dag.edges],
+            sink=self.dag.sink)
+        return ProxyBenchmark(dag=dag, description=self.description)
+
+
+def proxy_from_dwarf_weights(name: str,
+                             weights: Dict[str, float],
+                             base_size: int = 1 << 16,
+                             chunk: int = 256,
+                             parallelism: int = 1,
+                             components_per_dwarf: Optional[Dict[str, List[str]]] = None,
+                             ) -> ProxyBenchmark:
+    """Parameter-initialization stage (§2.3): build a linear-chain DAG whose
+    per-dwarf repeat weights are proportional to the profiled execution ratios.
+
+    ``weights`` come from :func:`repro.core.profiler.decompose_to_dwarfs` or
+    from a hand analysis (e.g. paper's TeraSort = 70% sort / 10% sampling /
+    20% graph).
+    """
+    total = sum(weights.values()) or 1.0
+    edges: List[Edge] = []
+    prev = "src"
+    idx = 0
+    for dwarf, w in sorted(weights.items(), key=lambda kv: -kv[1]):
+        if w <= 0:
+            continue
+        names = (components_per_dwarf or {}).get(dwarf)
+        comps = ([c.name for c in components_of_dwarf(dwarf)]
+                 if not names else names)
+        if not comps:
+            continue
+        # weight: ~8 repeats at 100% share, >=1 if present at all
+        rep = max(1, round(8.0 * w / total))
+        comp = comps[idx % len(comps)]
+        node = f"d{idx}_{dwarf}"
+        edges.append(Edge(
+            component=comp, src=[prev], dst=node,
+            params=ComponentParams(data_size=base_size, chunk_size=chunk,
+                                   parallelism=parallelism, weight=rep)))
+        prev = node
+        idx += 1
+    dag = ProxyDAG(name=name, sources={"src": base_size}, edges=edges, sink=prev)
+    return ProxyBenchmark(dag=dag, description=f"auto-initialized from {weights}")

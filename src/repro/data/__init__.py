@@ -1,0 +1,5 @@
+from .generators import (gen_graph, gen_images, gen_matrix, gen_records,
+                         gen_sparse_csr, gen_text_tokens, host_spill_bytes)
+
+__all__ = ["gen_graph", "gen_images", "gen_matrix", "gen_records",
+           "gen_sparse_csr", "gen_text_tokens", "host_spill_bytes"]

@@ -1,0 +1,79 @@
+"""Data generation tools (paper Fig. 3 — BDGS analog).
+
+Text / matrix / graph / record generators with controllable distribution
+parameters, so proxies consume data of the same type and distribution as the
+original workloads (paper §2.4: "The input data to each proxy benchmark has
+the same data type and distribution").
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gen_records(rng: jax.Array, n: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """gensort analog: (keys, payload) uint32 records for TeraSort."""
+    k1, k2 = jax.random.split(rng)
+    keys = jax.random.bits(k1, (n,), jnp.uint32)
+    payload = jax.random.bits(k2, (n,), jnp.uint32)
+    return keys, payload
+
+
+def gen_matrix(rng: jax.Array, rows: int, cols: int,
+               sparsity: float = 0.0) -> jnp.ndarray:
+    """Vector/matrix data with a controllable fraction of zero elements."""
+    k1, k2 = jax.random.split(rng)
+    x = jax.random.normal(k1, (rows, cols), jnp.float32)
+    if sparsity > 0.0:
+        mask = jax.random.uniform(k2, (rows, cols)) >= sparsity
+        x = x * mask
+    return x
+
+
+def gen_sparse_csr(rng: jax.Array, rows: int, cols: int, sparsity: float
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """CSR-like (col_idx, values) with a *static* nnz-per-row = cols*(1-s).
+
+    Sparsity changes the shapes (and therefore every cost channel), matching
+    the paper's observation that input sparsity halves memory bandwidth.
+    """
+    nnz = max(1, int(round(cols * (1.0 - sparsity))))
+    k1, k2 = jax.random.split(rng)
+    idx = jax.random.randint(k1, (rows, nnz), 0, cols)
+    vals = jax.random.normal(k2, (rows, nnz), jnp.float32)
+    return idx, vals
+
+
+def gen_graph(rng: jax.Array, n_edges: int, n_vertices: int,
+              powerlaw: float = 1.2) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Edge list with power-law-ish degree distribution (BDGS graph data)."""
+    k1, k2 = jax.random.split(rng)
+    u = jax.random.uniform(k1, (n_edges,))
+    # inverse-CDF sample of a truncated zipf over vertex ids
+    src = (n_vertices * u ** powerlaw).astype(jnp.int32) % n_vertices
+    dst = jax.random.randint(k2, (n_edges,), 0, n_vertices)
+    return src, dst
+
+
+def gen_text_tokens(rng: jax.Array, n: int, vocab: int,
+                    zipf_a: float = 1.1) -> jnp.ndarray:
+    """Zipf-distributed token ids (wikipedia-ish text for LM pipelines)."""
+    u = jax.random.uniform(rng, (n,), minval=1e-6)
+    ranks = (u ** (-1.0 / (zipf_a - 1.0 + 1e-6))).astype(jnp.int32)
+    return jnp.clip(ranks, 0, vocab - 1)
+
+
+def gen_images(rng: jax.Array, batch: int, h: int, w: int) -> jnp.ndarray:
+    """Smooth random images (low-frequency content like natural photos)."""
+    base = jax.random.normal(rng, (batch, h // 4, w // 4), jnp.float32)
+    img = jax.image.resize(base, (batch, h, w), "bilinear")
+    return img
+
+
+def host_spill_bytes(*arrays) -> float:
+    """Bytes of a host round trip for the given arrays (I/O accounting)."""
+    return float(sum(np.asarray(a).nbytes for a in arrays)) * 2.0

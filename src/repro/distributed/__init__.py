@@ -1,0 +1,2 @@
+from .sharding import (batch_axes, cache_specs_tree, input_shardings, named,
+                       param_specs)

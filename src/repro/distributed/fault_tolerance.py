@@ -1,0 +1,126 @@
+"""Fault tolerance: restartable training loop, straggler monitoring, and
+elastic mesh transitions.
+
+At 1000+ nodes the failure model is: (a) a worker dies mid-step -> the job
+restarts from the latest atomic checkpoint with deterministic data skipping;
+(b) a worker is slow (straggler) -> the step deadline fires and the
+microbatch schedule re-dispatches around it; (c) capacity changes -> the
+elastic path restores the same checkpoint onto a different mesh via
+per-leaf device_put with the new shardings (see train/checkpoint.py).
+
+On this CPU container the mechanisms are exercised with injected failures
+(tests/test_fault_tolerance.py); the policies are the production ones.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from ..train.checkpoint import (AsyncCheckpointer, latest_step,
+                                restore_checkpoint)
+
+
+class InjectedFailure(RuntimeError):
+    """Stands in for a dead host / preempted slice in tests."""
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    step_time: float
+    median: float
+    action: str
+
+
+class StragglerMonitor:
+    """Flags steps slower than ``threshold`` x running median.
+
+    Mitigation hook: on TPU pods the actionable responses are (1) re-dispatch
+    the straggler's microbatches to its DP peers for this step (collective-
+    free: grad contribution re-weighted), or (2) mark the host for
+    replacement at the next checkpoint boundary.  Here the hook records the
+    decision; the re-dispatch itself needs a real multi-host runtime.
+    """
+
+    def __init__(self, threshold: float = 2.0, window: int = 32):
+        self.threshold = threshold
+        self.window = window
+        self.times: List[float] = []
+        self.reports: List[StragglerReport] = []
+
+    def observe(self, step: int, step_time: float) -> Optional[StragglerReport]:
+        self.times.append(step_time)
+        self.times = self.times[-self.window:]
+        if len(self.times) < 5:
+            return None
+        med = statistics.median(self.times)
+        if step_time > self.threshold * med:
+            rep = StragglerReport(step, step_time, med,
+                                  "re-dispatch microbatches to DP peers")
+            self.reports.append(rep)
+            return rep
+        return None
+
+
+@dataclasses.dataclass
+class LoopResult:
+    state: Any
+    metrics_history: List[Dict[str, float]]
+    restarts: int
+    straggler_reports: List[StragglerReport]
+
+
+class ResilientTrainLoop:
+    """Checkpoint/restart training loop with deterministic data replay.
+
+    ``batch_fn(step) -> batch`` must be deterministic in ``step`` so that a
+    restart resumes on exactly the data it would have seen (the data pipeline
+    derives its RNG from the step index).
+    """
+
+    def __init__(self, train_step: Callable, ckpt_dir: str,
+                 ckpt_every: int = 50, keep: int = 3,
+                 straggler_threshold: float = 2.0):
+        self.train_step = train_step
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.checkpointer = AsyncCheckpointer(ckpt_dir, keep=keep)
+        self.monitor = StragglerMonitor(straggler_threshold)
+
+    def run(self, state: Any, batch_fn: Callable[[int], Any], num_steps: int,
+            failure_injector: Optional[Callable[[int], None]] = None,
+            shardings: Any = None) -> LoopResult:
+        history: List[Dict[str, float]] = []
+        restarts = 0
+        step = int(jax.device_get(state.step))
+        while step < num_steps:
+            try:
+                if failure_injector is not None:
+                    failure_injector(step)
+                t0 = time.perf_counter()
+                state, metrics = self.train_step(state, batch_fn(step))
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.monitor.observe(step, dt)
+                history.append({k: float(jax.device_get(v))
+                                for k, v in metrics.items()})
+                step += 1
+                if step % self.ckpt_every == 0 or step == num_steps:
+                    self.checkpointer.save(state, step)
+            except InjectedFailure:
+                restarts += 1
+                self.checkpointer.wait()
+                last = latest_step(self.ckpt_dir)
+                if last is None:
+                    raise
+                state = restore_checkpoint(state, self.ckpt_dir, last,
+                                           shardings=shardings)
+                step = int(jax.device_get(state.step))
+        self.checkpointer.wait()
+        return LoopResult(state, history, restarts, self.monitor.reports)

@@ -1,0 +1,212 @@
+"""Sharding rules: TP over 'model', DP/FSDP over 'data', pure DP over 'pod'.
+
+Conventions (DESIGN.md §6):
+  * batch dims shard over ('pod', 'data') — pods are data-parallel replicas
+    (gradient all-reduce crosses the DCN-ish pod axis once per step).
+  * 2-D weights: output dim over 'model' (Megatron column-parallel), input
+    dim over 'data' (ZeRO-3/FSDP) when divisible; row-parallel for the
+    second matmul of each pair (wo / w_down / out_proj).
+  * expert weights (E, d, f): f over 'model', d over 'data' — EPxTP without
+    uneven shards (E = 40/384/16 are not divisible by 16; dims are).
+  * block-stacked params carry a leading n_blocks scan axis — never sharded.
+  * a dim is sharded only if divisible by the axis size (no uneven shards).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+
+def mesh_axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape.get(axis, 1)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _div(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+def _maybe(axis, dim: int, mesh: Mesh):
+    """axis (or axis tuple) if it divides dim, else None."""
+    if axis is None:
+        return None
+    size = int(np.prod([mesh_axis_size(mesh, a) for a in
+                        (axis if isinstance(axis, tuple) else (axis,))]))
+    return axis if _div(dim, size) else None
+
+
+def batch_spec_axis(mesh: Mesh, batch: int):
+    """('pod','data') / 'data' / None depending on divisibility."""
+    axes = batch_axes(mesh)
+    full = int(np.prod([mesh_axis_size(mesh, a) for a in axes]))
+    if _div(batch, full):
+        return axes if len(axes) > 1 else axes[0]
+    if _div(batch, mesh_axis_size(mesh, "data")):
+        return "data"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+_COLUMN = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "dt_proj",
+           "w_if", "lm_head"}
+# w_x is row-parallel so the sLSTM scan input needs one psum per layer
+# instead of a per-step psum on a sharded carry
+_ROW = {"wo", "w_down", "out_proj", "w_out", "x_proj", "w_x"}
+
+
+def _leaf_spec(name: str, shape: Tuple[int, ...], mesh: Mesh,
+               fsdp: bool, stacked: bool,
+               heads_divisible: bool = True,
+               kv_divisible: bool = True,
+               moe_ep: bool = False) -> P:
+    """Spec for one parameter; ``stacked`` = leading n_blocks scan axis."""
+    dims = shape[1:] if stacked else shape
+    lead = (None,) if stacked else ()
+    dp = "data" if fsdp else None
+
+    def spec(*axes):
+        return P(*lead, *axes)
+
+    # attention head sharding must respect head boundaries: a sub-head TP
+    # split puts an all-reduce inside every attention block (measured:
+    # 2816 all-reduces/step on tinyllama).  If q-heads don't divide by tp,
+    # attention runs data-parallel only; if only kv-heads don't, KV
+    # projections replicate (GQA KV is small) and q/o stay column/row.
+    if name in ("wq", "wk", "wv", "wo", "bq", "bk", "bv"):
+        if not heads_divisible or (name in ("wk", "wv", "bk", "bv")
+                                   and not kv_divisible):
+            if len(dims) == 2:
+                return spec(_maybe(dp, dims[0], mesh), None)
+            return spec(*([None] * len(dims)))
+
+    if len(dims) == 0:
+        return spec()
+    if len(dims) == 1:
+        if name in ("bq", "bk", "bv"):
+            return spec(_maybe("model", dims[0], mesh))
+        return spec(_maybe("model", dims[0], mesh))
+    if name == "embed":
+        # vocab dim deliberately NOT sharded: a V-sharded table forces XLA to
+        # replicate the (B,S,d) gather output / grad scatter across 'data',
+        # destroying batch sharding end-to-end (measured: 8x activation blow-up)
+        return spec(None, _maybe("model", dims[1], mesh))
+    if name in ("router",):
+        return spec(_maybe("model", dims[0], mesh), None)
+    if name in ("conv_w",):
+        return spec(None, _maybe("model", dims[1], mesh))
+    if name in ("A_log", "D"):
+        return spec(_maybe("model", dims[0], mesh),
+                    *([None] * (len(dims) - 1)))
+    if name == "r_h":
+        # sLSTM recurrent weights replicate: any sharding of the carry puts
+        # a 1MB psum inside every sequential time step (measured: 98k
+        # all-reduces/step on xlstm train_4k)
+        return spec(*([None] * len(dims)))
+    if len(dims) == 3:           # experts (E, d, f) / (E, f, d); r_h (H,hd,4hd)
+        if name in ("w_gate", "w_up", "w_down") and moe_ep:
+            # expert parallelism: experts over 'model', FSDP on d_model dim
+            ddim = 1 if name != "w_down" else 2
+            ax = [None, None, None]
+            ax[0] = _maybe("model", dims[0], mesh)
+            ax[ddim] = _maybe(dp, dims[ddim], mesh)
+            return spec(*ax)
+        if name in ("w_gate", "w_up"):
+            return spec(None, _maybe(dp, dims[1], mesh),
+                        _maybe("model", dims[2], mesh))
+        if name == "w_down":
+            return spec(None, _maybe("model", dims[1], mesh),
+                        _maybe(dp, dims[2], mesh))
+        return spec(None, None, _maybe("model", dims[-1], mesh))
+    # 2-D
+    if name in _ROW:
+        return spec(_maybe("model", dims[0], mesh), _maybe(dp, dims[1], mesh))
+    if name in _COLUMN or True:  # column-parallel is the generic fallback
+        mspec = _maybe("model", dims[1], mesh)
+        if mspec is None:        # fall back to row-parallel
+            return spec(_maybe("model", dims[0], mesh), None)
+        return spec(_maybe(dp, dims[0], mesh), mspec)
+
+
+def param_specs(params_tree: Any, mesh: Mesh, fsdp: bool = True,
+                cfg: Optional[ArchConfig] = None) -> Any:
+    """PartitionSpec tree matching ``params_tree`` (arrays or SDS)."""
+    tp = mesh_axis_size(mesh, "model")
+    heads_div = cfg is None or cfg.n_heads % tp == 0
+    kv_div = cfg is None or cfg.n_kv_heads % tp == 0
+    moe_ep = bool(cfg and cfg.moe_experts and cfg.moe_experts % tp == 0)
+
+    def walk(path, leaf):
+        name = None
+        stacked = False
+        for p in path:
+            key = getattr(p, "key", None)
+            if key == "blocks":
+                stacked = True
+            if key is not None:
+                name = key
+        shape = leaf.shape
+        return _leaf_spec(name or "", shape, mesh, fsdp, stacked,
+                          heads_divisible=heads_div, kv_divisible=kv_div,
+                          moe_ep=moe_ep)
+
+    return jax.tree_util.tree_map_with_path(walk, params_tree)
+
+
+def named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation / cache specs
+# ---------------------------------------------------------------------------
+
+
+def input_shardings(cfg: ArchConfig, specs: Dict[str, Any], mesh: Mesh
+                    ) -> Dict[str, Any]:
+    out = {}
+    for k, v in specs.items():
+        if not hasattr(v, "shape") or v.shape == ():
+            out[k] = NamedSharding(mesh, P())
+            continue
+        b = batch_spec_axis(mesh, v.shape[0])
+        out[k] = NamedSharding(mesh, P(b, *([None] * (len(v.shape) - 1))))
+    return out
+
+
+def cache_specs_tree(cfg: ArchConfig, cache_shapes: Any, mesh: Mesh) -> Any:
+    """KV caches: batch over data axes when divisible, else sequence over
+    'data' (long-context single-sequence decode); head_dim over 'model'.
+    SSM/xLSTM states: widest state dim over 'model'."""
+
+    def walk(path, leaf):
+        shape = leaf.shape
+        # (n_blocks, B, S, Kv, hd) KV cache
+        if len(shape) == 5:
+            b = batch_spec_axis(mesh, shape[1])
+            seq = None if b is not None else _maybe("data", shape[2], mesh)
+            return P(None, b, seq, None, _maybe("model", shape[4], mesh))
+        if len(shape) == 4:      # mamba (n_blocks, B, di, st) / mlstm C
+            b = batch_spec_axis(mesh, shape[1])
+            return P(None, b, _maybe("model", shape[2], mesh), None)
+        if len(shape) == 3:      # (n_blocks, B, x)
+            b = batch_spec_axis(mesh, shape[1])
+            return P(None, b, _maybe("model", shape[2], mesh))
+        if len(shape) == 2:
+            b = batch_spec_axis(mesh, shape[1])
+            return P(None, b)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(walk, cache_shapes)

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the compute hot-spots the dwarf methodology owns:
+# matrix dwarf (matmul), LM attention (flash_attention), sort dwarf /
+# MoE router (topk), logic dwarf (hash_mix).  Each: kernel.py
+# (pl.pallas_call + BlockSpec VMEM tiling) + ops.py (jit wrapper) + ref.py
+# (pure-jnp oracle).  Validated with interpret=True on CPU; TPU is the
+# compile target.

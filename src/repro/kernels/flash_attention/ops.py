@@ -1,0 +1,41 @@
+"""jit'd public wrapper: layout handling, padding, GQA, interpret toggle."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """(B, S, H, hd)-layout attention via the Pallas TPU kernel.
+
+    Pads Sq/Skv to the block grid; padding is masked inside the kernel via
+    ``kv_len`` and discarded on return.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, Kv = k.shape[1], k.shape[2]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bq = min(block_q, max(Sq, 8))
+    bkv = min(block_kv, max(Skv, 8))
+    pq = (-Sq) % bq
+    pkv = (-Skv) % bkv
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pkv:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+    out = flash_attention_kernel(qt, kt, vt, causal=causal, kv_len=Skv,
+                                 block_q=bq, block_kv=bkv,
+                                 interpret=interpret)
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)

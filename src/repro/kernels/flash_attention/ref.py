@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, kv_len: int | None = None
+                  ) -> jnp.ndarray:
+    """q: (B, H, Sq, hd); k/v: (B, Kv, Skv, hd)."""
+    B, H, Sq, hd = q.shape
+    Kv, Skv = k.shape[1], k.shape[2]
+    G = H // Kv
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    rows = jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = cols <= rows
+    if kv_len is not None:
+        mask = mask & (cols < kv_len)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

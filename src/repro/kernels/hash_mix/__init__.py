@@ -1,0 +1,3 @@
+from .kernel import hash_mix_kernel
+from .ops import hash_mix
+from .ref import hash_mix_ref

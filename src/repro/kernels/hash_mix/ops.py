@@ -1,0 +1,18 @@
+"""jit'd wrapper for hash_mix (flat input reshaped to lanes)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import hash_mix_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("rounds", "lanes", "interpret"))
+def hash_mix(x: jnp.ndarray, *, rounds: int = 2, lanes: int = 128,
+             interpret: bool = True) -> jnp.ndarray:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % lanes
+    xp = jnp.pad(flat, (0, pad)).reshape(-1, lanes)
+    out = hash_mix_kernel(xp, rounds=rounds, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(x.shape)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the hash_mix kernel."""
+import jax.numpy as jnp
+
+
+def hash_mix_ref(x: jnp.ndarray, rounds: int = 2) -> jnp.ndarray:
+    u = x
+    for _ in range(rounds):
+        u = u ^ (u >> 16)
+        u = u * jnp.uint32(0x85EBCA6B)
+        u = u ^ (u >> 13)
+        u = u * jnp.uint32(0xC2B2AE35)
+        u = u ^ (u >> 16)
+    return u

@@ -1,0 +1,3 @@
+from .kernel import matmul_kernel
+from .ops import matmul
+from .ref import matmul_ref

@@ -1,0 +1,23 @@
+"""jit'd wrapper with shape padding for the tiled matmul kernel."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import matmul_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int = 128,
+           block_n: int = 128, block_k: int = 128,
+           interpret: bool = True) -> jnp.ndarray:
+    M, K = a.shape
+    _, N = b.shape
+    bm, bn, bk = (min(block_m, M), min(block_n, N), min(block_k, K))
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    ap = jnp.pad(a, ((0, pm), (0, pk))) if (pm or pk) else a
+    bp = jnp.pad(b, ((0, pk), (0, pn))) if (pk or pn) else b
+    out = matmul_kernel(ap, bp, block_m=bm, block_n=bn, block_k=bk,
+                        interpret=interpret)
+    return out[:M, :N]

@@ -1,0 +1,3 @@
+from .kernel import topk_kernel
+from .ops import topk
+from .ref import topk_ref

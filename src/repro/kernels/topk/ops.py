@@ -1,0 +1,18 @@
+"""jit'd wrapper for the top-k kernel (row padding)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import topk_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_m", "interpret"))
+def topk(x: jnp.ndarray, k: int, *, block_m: int = 256,
+         interpret: bool = True):
+    M, N = x.shape
+    bm = min(block_m, M)
+    pm = (-M) % bm
+    xp = jnp.pad(x, ((0, pm), (0, 0))) if pm else x
+    vals, idx = topk_kernel(xp, k, block_m=bm, interpret=interpret)
+    return vals[:M], idx[:M]

@@ -1,0 +1,40 @@
+"""Analytic MODEL_FLOPS per (arch, shape) — the roofline 'useful compute'.
+
+Conventions:
+  * N_eff = active params excluding the input embedding table (gather).
+  * train  : 6 * N_eff * tokens  (+ attention term, x3 for fwd+bwd)
+  * prefill: 2 * N_eff * tokens  (+ attention term)
+  * decode : per-step — 2 * N_eff * B + attention-cache reads 4*B*S*H*hd
+    per attention layer.
+MoE uses 6 * N_active * D per the brief.
+"""
+
+from __future__ import annotations
+
+from ..configs.base import ArchConfig, ShapeSpec
+
+
+def _n_attn_layers(cfg: ArchConfig) -> int:
+    per_block = sum(1 for t in cfg.pattern if t.startswith("attn"))
+    n = per_block * cfg.n_blocks
+    return n
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    n_eff = cfg.active_param_count() - cfg.vocab * cfg.d_model
+    d_attn = cfg.n_heads * cfg.hd
+    n_attn = _n_attn_layers(cfg)
+    if shape.kind == "train":
+        tokens = B * S
+        attn = 2.0 * B * S * S * d_attn * n_attn      # causal-halved qk+av
+        return 6.0 * n_eff * tokens + 3.0 * attn
+    if shape.kind == "prefill":
+        tokens = B * S
+        attn = 2.0 * B * S * S * d_attn * n_attn
+        return 2.0 * n_eff * tokens + attn
+    # decode: one token per sequence against an S-deep cache
+    attn = 4.0 * B * S * d_attn * n_attn
+    if cfg.is_encdec:
+        attn += 4.0 * B * cfg.encoder_seq * d_attn * n_attn
+    return 2.0 * n_eff * B + attn

@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell: jit with production shardings -> .lower() -> .compile() ->
+memory_analysis + cost_analysis + HLO collective schedule -> roofline terms.
+Results cached as JSON under experiments/dryrun/ (one file per cell); this
+is the data EXPERIMENTS.md §Dry-run/§Roofline and the proxy generator read.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both [--force] [--fsdp/--no-fsdp]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES, cell_is_supported, get_arch
+from ..core.metrics import analyze_hlo_text, roofline_from_report
+from ..distributed.sharding import (cache_specs_tree, input_shardings, named,
+                                    param_specs)
+from ..models.model import Model, cache_specs, input_specs
+from ..serve.serve_step import make_decode_step, make_prefill_step
+from ..train.optimizer import AdamWConfig
+from ..train.train_step import TrainOptions, TrainState, init_state, make_train_step
+from .analytic import model_flops
+from .mesh import make_production_mesh
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _sds_tree(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             fsdp: bool = True, opts: Optional[TrainOptions] = None,
+             remat: bool = True, accum: int = 4,
+             vmem_fused: float = 0.0, remat_policy: str = "none") -> dict:
+    cfg = get_arch(arch)
+    if cfg.remat != remat or cfg.remat_policy != remat_policy:
+        cfg = dataclasses.replace(cfg, remat=remat, remat_policy=remat_policy)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_supported(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "fsdp": fsdp,
+           "params_total": cfg.param_count(),
+           "params_active": cfg.active_param_count()}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    if opts is None:
+        opts = TrainOptions(accum=accum,
+                            batch_axes=(("pod", "data") if multi_pod
+                                        else ("data",)))
+    tp = 16
+    dp_total = 32 if multi_pod else 16
+    cfg = dataclasses.replace(
+        cfg, mesh_batch_axes=opts.batch_axes,
+        attn_seq_shard=("model" if cfg.n_heads % tp != 0 else None),
+        moe_groups=dp_total,
+        moe_ep=bool(cfg.moe_experts) and cfg.moe_experts % tp == 0)
+    model = Model(cfg, batch_axes=opts.batch_axes)
+    specs = input_specs(cfg, shape)
+    t0 = time.perf_counter()
+
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = param_specs(params_sds, mesh, fsdp=fsdp, cfg=cfg)
+    pshard = named(pspecs, mesh)
+    in_sh = input_shardings(cfg, specs, mesh)
+
+    if shape.kind == "train":
+        state_sds = jax.eval_shape(
+            lambda: init_state(model, jax.random.PRNGKey(0)))
+        opt_sh = {"mu": pshard, "nu": pshard, "master": pshard}
+        state_sh = TrainState(params=pshard, opt=opt_sh,
+                              step=jax.NamedSharding(mesh, jax.P()))
+        step_fn = make_train_step(model, AdamWConfig(), opts)
+        jfn = jax.jit(step_fn, in_shardings=(state_sh, in_sh),
+                      donate_argnums=(0,))
+        args = (state_sds, specs)
+    elif shape.kind == "prefill":
+        cache_sds = cache_specs(cfg, shape)
+        cache_sh = named(cache_specs_tree(cfg, cache_sds, mesh), mesh)
+        fn = make_prefill_step(model)
+        jfn = jax.jit(fn, in_shardings=(pshard, cache_sh, in_sh),
+                      donate_argnums=(1,))
+        args = (params_sds, cache_sds, specs)
+    else:  # decode
+        cache_sds = cache_specs(cfg, shape)
+        cache_sh = named(cache_specs_tree(cfg, cache_sds, mesh), mesh)
+        fn = make_decode_step(model)
+        rep = jax.NamedSharding(mesh, jax.P())
+        jfn = jax.jit(fn, in_shardings=(pshard, cache_sh,
+                                        in_sh["tokens"], rep),
+                      donate_argnums=(1,))
+        args = (params_sds, cache_sds, specs["tokens"], specs["index"])
+
+    with mesh:
+        lowered = jfn.lower(*args)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+
+    mem = compiled.memory_analysis()
+    text = compiled.as_text()
+    report = analyze_hlo_text(text, vmem_bytes=vmem_fused)
+    mf = model_flops(cfg, shape)
+    roof = roofline_from_report(report, chips, mf)
+    xla_cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        xla_cost = {k: float(v) for k, v in ca.items()
+                    if k in ("flops", "bytes accessed")}
+    except Exception:
+        pass
+
+    rec.update({
+        "status": "ok",
+        "lower_s": t1 - t0,
+        "compile_s": t2 - t1,
+        "chips": chips,
+        "model_flops": mf,
+        "bytes_per_device": {
+            "args": float(mem.argument_size_in_bytes),
+            "temp": float(mem.temp_size_in_bytes),
+            "out": float(mem.output_size_in_bytes),
+            "peak": float(mem.argument_size_in_bytes
+                          + mem.temp_size_in_bytes),
+        },
+        "fits_16GB": bool(mem.argument_size_in_bytes
+                          + mem.temp_size_in_bytes < 16e9),
+        "hlo_lines": text.count("\n"),
+        "xla_cost_uncorrected": xla_cost,
+        "report": report.to_json(),
+        "roofline": roof.to_json(),
+    })
+    return rec
+
+
+def cell_path(arch, shape, mesh_name, tag="") -> Path:
+    return OUT_DIR / f"{arch}__{shape}__{mesh_name}{tag}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-fsdp", dest="fsdp", action="store_false")
+    ap.add_argument("--tag", default="", help="suffix for perf-variant runs")
+    ap.add_argument("--no-remat", dest="remat", action="store_false")
+    ap.add_argument("--vmem-fused", type=float, default=0.0,
+                    help="VMEM budget (bytes) for fused-kernel accounting")
+    ap.add_argument("--remat-policy", default="none", choices=["none", "dots"])
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                path = cell_path(arch, shape, mesh_name, args.tag)
+                if path.exists() and not args.force:
+                    print(f"[cached] {path.name}")
+                    continue
+                t0 = time.perf_counter()
+                try:
+                    rec = run_cell(arch, shape, multi, fsdp=args.fsdp,
+                                   remat=args.remat,
+                                   vmem_fused=args.vmem_fused,
+                                   remat_policy=args.remat_policy)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                rec["wall_s"] = time.perf_counter() - t0
+                path.write_text(json.dumps(rec, indent=1))
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_fail += st == "error"
+                extra = ""
+                if st == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']} step={r['step_time_s']:.4f}s"
+                             f" mfu={r['mfu']:.3f}"
+                             f" peak={rec['bytes_per_device']['peak']/1e9:.1f}GB")
+                if st == "error":
+                    extra = " " + rec["error"][:160]
+                print(f"[{st}] {arch} {shape} {mesh_name}"
+                      f" ({rec['wall_s']:.0f}s){extra}", flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

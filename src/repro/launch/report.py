@@ -1,0 +1,75 @@
+"""Render EXPERIMENTS.md roofline tables from cached dry-run JSONs."""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _load(tag: str):
+    cells = {}
+    for f in sorted(DRYRUN.glob("*.json")):
+        stem = f.stem
+        if tag and not stem.endswith(tag):
+            continue
+        if not tag and ("_opt" in stem):
+            continue
+        d = json.loads(f.read_text())
+        cells[(d["arch"], d["shape"], d["mesh"])] = d
+    return cells
+
+
+def roofline_table(tag: str = "", mesh: str = "16x16") -> str:
+    cells = _load(tag)
+    out = ["| arch | shape | dom | compute s | memory s | coll s | "
+           "step s | MFU | useful | peak GB | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), d in sorted(cells.items()):
+        if m != mesh:
+            continue
+        if d["status"] == "skipped":
+            out.append(f"| {arch} | {shape} | — | — | — | — | — | — | — | — "
+                       f"| skip: sub-quadratic-only shape |")
+            continue
+        if d["status"] != "ok":
+            out.append(f"| {arch} | {shape} | ERROR | | | | | | | | |")
+            continue
+        r = d["roofline"]
+        out.append(
+            f"| {arch} | {shape} | {r['dominant'][:4]} | "
+            f"{r['compute_s']:.2f} | {r['memory_s']:.2f} | "
+            f"{r['collective_s']:.2f} | {r['step_time_s']:.2f} | "
+            f"{r['mfu']:.3f} | {r['useful_flops_ratio']:.2f} | "
+            f"{d['bytes_per_device']['peak'] / 1e9:.1f} | "
+            f"{'Y' if d['fits_16GB'] else 'N'} |")
+    return "\n".join(out)
+
+
+def dryrun_summary(tag: str = "") -> str:
+    cells = _load(tag)
+    n_ok = sum(1 for d in cells.values() if d["status"] == "ok")
+    n_skip = sum(1 for d in cells.values() if d["status"] == "skipped")
+    lines = [f"cells={len(cells)} ok={n_ok} skipped={n_skip} "
+             f"errors={len(cells) - n_ok - n_skip}"]
+    for (arch, shape, m), d in sorted(cells.items()):
+        if d["status"] != "ok" or m != "2x16x16":
+            continue
+        coll = d["report"]["collective_count"]
+        lines.append(
+            f"  {arch} {shape} {m}: compile={d['compile_s']:.0f}s "
+            f"bytes/dev={d['bytes_per_device']['peak']/1e9:.1f}GB "
+            f"collectives={{{', '.join(f'{k}:{int(v)}' for k, v in sorted(coll.items()))}}}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    what = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    tag = sys.argv[2] if len(sys.argv) > 2 else ""
+    mesh = sys.argv[3] if len(sys.argv) > 3 else "16x16"
+    if what == "roofline":
+        print(roofline_table(tag, mesh))
+    else:
+        print(dryrun_summary(tag))

@@ -1,0 +1,3 @@
+from .model import Model, cache_specs, input_specs
+
+__all__ = ["Model", "cache_specs", "input_specs"]

@@ -1,0 +1,157 @@
+"""Layer-type registry: init / apply / cache-init per block layer type.
+
+Types: attn, attn_moe, attn_enc, attn_cross, mamba, mamba_moe, mlstm, slstm.
+An architecture is ``pattern`` (a tuple of types) repeated ``n_blocks`` times;
+the stack scans over blocks with per-type params stacked on axis 0.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .components import (attention, attn_init, mlp_apply, mlp_init, moe_apply,
+                         moe_init, rms_norm)
+from .ssm import mamba_apply, mamba_init, mamba_state_init
+from .xlstm import (mlstm_apply, mlstm_init, mlstm_state_init, slstm_apply,
+                    slstm_init, slstm_state_init)
+
+
+def _ln(cfg):
+    return jnp.ones((cfg.d_model,), jnp.float32)
+
+
+# -- init -------------------------------------------------------------------
+
+
+def init_layer(rng, ltype: str, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(rng, 4)
+    if ltype in ("attn", "attn_enc"):
+        return {"ln1": _ln(cfg), "attn": attn_init(ks[0], cfg),
+                "ln2": _ln(cfg), "mlp": mlp_init(ks[1], cfg)}
+    if ltype == "attn_moe":
+        return {"ln1": _ln(cfg), "attn": attn_init(ks[0], cfg),
+                "ln2": _ln(cfg), "moe": moe_init(ks[1], cfg)}
+    if ltype == "attn_cross":
+        return {"ln1": _ln(cfg), "attn": attn_init(ks[0], cfg),
+                "ln_x": _ln(cfg), "xattn": attn_init(ks[1], cfg),
+                "ln2": _ln(cfg), "mlp": mlp_init(ks[2], cfg)}
+    if ltype == "mamba":
+        return {"ln1": _ln(cfg), "mamba": mamba_init(ks[0], cfg)}
+    if ltype == "mamba_moe":
+        return {"ln1": _ln(cfg), "mamba": mamba_init(ks[0], cfg),
+                "ln2": _ln(cfg), "moe": moe_init(ks[1], cfg)}
+    if ltype == "mlstm":
+        return {"ln1": _ln(cfg), "mlstm": mlstm_init(ks[0], cfg)}
+    if ltype == "slstm":
+        return {"ln1": _ln(cfg), "slstm": slstm_init(ks[0], cfg)}
+    raise ValueError(f"unknown layer type {ltype!r}")
+
+
+# -- cache ------------------------------------------------------------------
+
+
+def init_layer_cache(ltype: str, cfg: ArchConfig, batch: int,
+                     max_seq: int, dtype) -> Any:
+    """Decode-time cache entry for one layer (None when stateless)."""
+    if ltype.startswith("attn"):
+        kv = (jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+              jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype))
+        if ltype == "attn_cross":
+            xkv = (jnp.zeros((batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd),
+                             dtype),
+                   jnp.zeros((batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd),
+                             dtype))
+            return {"kv": kv, "xkv": xkv}
+        return {"kv": kv}
+    if ltype.startswith("mamba"):
+        return {"ssm": mamba_state_init(cfg, batch)}
+    if ltype == "mlstm":
+        return {"mlstm": mlstm_state_init(cfg, batch)}
+    if ltype == "slstm":
+        return {"slstm": slstm_state_init(cfg, batch)}
+    raise ValueError(ltype)
+
+
+# -- apply ------------------------------------------------------------------
+
+
+def apply_layer(ltype: str, p: Dict, x: jnp.ndarray, cfg: ArchConfig, *,
+                positions: Optional[jnp.ndarray],
+                cache: Optional[Dict] = None,
+                cache_index=None,
+                enc_out: Optional[jnp.ndarray] = None,
+                causal: bool = True) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Optional[Dict] = None
+
+    if ltype.startswith("attn"):
+        h = rms_norm(x, p["ln1"].astype(x.dtype))
+        if cache is not None:
+            a, kv = attention(p["attn"], h, h, cfg, positions, causal=True,
+                              cache=cache["kv"], cache_index=cache_index)
+            new_cache = {"kv": kv}
+        else:
+            a, _ = attention(p["attn"], h, h, cfg, positions,
+                             causal=(causal and ltype != "attn_enc"))
+        x = x + a
+        if ltype == "attn_cross":
+            hx = rms_norm(x, p["ln_x"].astype(x.dtype))
+            if cache is not None:
+                from .components import _dispatch_sdpa, _project_qkv
+                if enc_out is not None:
+                    # prefill: build the cross KV cache from encoder output
+                    q, ck, cv = _project_qkv(p["xattn"], hx, enc_out, cfg)
+                    ck, cv = ck.astype(cache["xkv"][0].dtype), \
+                        cv.astype(cache["xkv"][1].dtype)
+                else:
+                    ck, cv = cache["xkv"]
+                    q, _, _ = _project_qkv(p["xattn"], hx, hx, cfg)
+                o = _dispatch_sdpa(q, ck, cv, causal=False, cfg=cfg)
+                x = x + o @ p["xattn"]["wo"]
+                new_cache["xkv"] = (ck, cv)
+            else:
+                a, _ = attention(p["xattn"], hx, enc_out, cfg, None,
+                                 causal=False)
+                x = x + a
+        h2 = rms_norm(x, p["ln2"].astype(x.dtype))
+        if ltype == "attn_moe":
+            m, aux = moe_apply(p["moe"], h2, cfg)
+        else:
+            m = mlp_apply(p["mlp"], h2)
+        return x + m, new_cache, aux
+
+    if ltype.startswith("mamba"):
+        h = rms_norm(x, p["ln1"].astype(x.dtype))
+        state = cache["ssm"] if cache is not None else None
+        y, new_state = mamba_apply(p["mamba"], h, cfg, state)
+        x = x + y
+        if cache is not None:
+            new_cache = {"ssm": new_state}
+        if ltype == "mamba_moe":
+            h2 = rms_norm(x, p["ln2"].astype(x.dtype))
+            m, aux = moe_apply(p["moe"], h2, cfg)
+            x = x + m
+        return x, new_cache, aux
+
+    if ltype == "mlstm":
+        h = rms_norm(x, p["ln1"].astype(x.dtype))
+        state = cache["mlstm"] if cache is not None else None
+        y, new_state = mlstm_apply(p["mlstm"], h, cfg, state)
+        if cache is not None:
+            new_cache = {"mlstm": new_state}
+        return x + y, new_cache, aux
+
+    if ltype == "slstm":
+        h = rms_norm(x, p["ln1"].astype(x.dtype))
+        state = cache["slstm"] if cache is not None else None
+        y, new_state = slstm_apply(p["slstm"], h, cfg, state)
+        if cache is not None:
+            new_cache = {"slstm": new_state}
+        return x + y, new_cache, aux
+
+    raise ValueError(ltype)

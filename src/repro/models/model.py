@@ -1,0 +1,241 @@
+"""Unified LM: pattern-scanned layer stack covering all 10 architectures.
+
+The layer stack is ``cfg.pattern`` repeated ``cfg.n_blocks`` times; block
+params are stacked on axis 0 and the stack runs under ``jax.lax.scan`` (HLO
+size O(pattern), compile time independent of depth — the profiler multiplies
+costs by the known trip count).  Modality frontends (whisper audio conv,
+qwen2-vl patches) are stubs: precomputed embeddings arrive as inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from .blocks import apply_layer, init_layer, init_layer_cache
+from .components import _dtype, dense_init, rms_norm
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig,
+                 batch_axes: Optional[Tuple[str, ...]] = None):
+        self.cfg = cfg
+        # sharding propagation into scan/while bodies is unreliable (GSPMD
+        # picked batch-replicated layouts in the layer loop); constraining
+        # the residual stream once per block pins it down.
+        self.batch_axes = batch_axes
+
+    def _constrain(self, x: jnp.ndarray) -> jnp.ndarray:
+        if not self.batch_axes:
+            return x
+        ba = self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+        spec = jax.sharding.PartitionSpec(ba, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    # -- params ---------------------------------------------------------------
+
+    def init(self, rng: jax.Array) -> Dict:
+        cfg = self.cfg
+        n_keys = 4 + len(cfg.pattern) * cfg.n_blocks + cfg.encoder_layers
+        keys = iter(jax.random.split(rng, n_keys + 4))
+        params: Dict[str, Any] = {
+            "embed": (jax.random.normal(next(keys), (cfg.vocab, cfg.d_model),
+                                        jnp.float32) * 0.02
+                      ).astype(_dtype(cfg)),
+            "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(next(keys), cfg.d_model, cfg.vocab,
+                                           cfg)
+        blocks: Dict[str, Any] = {}
+        for i, lt in enumerate(cfg.pattern):
+            per_block = [init_layer(next(keys), lt, cfg)
+                         for _ in range(cfg.n_blocks)]
+            blocks[f"p{i}_{lt}"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *per_block)
+        params["blocks"] = blocks
+        if cfg.encoder_layers:
+            enc_blocks = [init_layer(next(keys), "attn_enc", cfg)
+                          for _ in range(cfg.encoder_layers)]
+            params["encoder"] = {
+                "pos": (jax.random.normal(next(keys),
+                                          (cfg.encoder_seq, cfg.d_model),
+                                          jnp.float32) * 0.02
+                        ).astype(_dtype(cfg)),
+                "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_blocks),
+                "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+            }
+        return params
+
+    # -- encoder (whisper) ------------------------------------------------------
+
+    def encode(self, params: Dict, frames: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        enc = params["encoder"]
+        x = frames + enc["pos"].astype(frames.dtype)
+
+        def body(h, bp):
+            h, _, _ = apply_layer("attn_enc", bp, self._constrain(h), cfg,
+                                  positions=None, causal=False)
+            return h, ()
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, enc["blocks"])
+        return rms_norm(x, enc["final_ln"].astype(x.dtype))
+
+    # -- full-sequence forward --------------------------------------------------
+
+    def forward(self, params: Dict, tokens: jnp.ndarray, *,
+                vision_embeds: Optional[jnp.ndarray] = None,
+                mrope_positions: Optional[jnp.ndarray] = None,
+                frames: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """tokens: (B, S_text). Returns (logits, aux_loss)."""
+        cfg = self.cfg
+        x = params["embed"][tokens]                      # gather
+        if vision_embeds is not None:                    # VLM prefix
+            x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+        x = self._constrain(x)
+        B, S, _ = x.shape
+        if cfg.mrope:
+            positions = mrope_positions
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        enc_out = self.encode(params, frames) if frames is not None else None
+
+        def block(h, bp):
+            h = self._constrain(h)
+            aux = jnp.zeros((), jnp.float32)
+            for i, lt in enumerate(cfg.pattern):
+                h, _, a = apply_layer(lt, bp[f"p{i}_{lt}"], h, cfg,
+                                      positions=positions, enc_out=enc_out)
+                aux = aux + a
+            return self._constrain(h), aux
+
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.dots_saveable
+                      if cfg.remat_policy == "dots" else None)
+            block_fn = jax.checkpoint(block, policy=policy)
+        else:
+            block_fn = block
+        x, auxs = jax.lax.scan(block_fn, x, params["blocks"])
+        x = rms_norm(x, params["final_ln"].astype(x.dtype))
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = x @ head.astype(x.dtype)
+        if cfg.logits_fp32:
+            logits = logits.astype(jnp.float32)
+        return logits, jnp.sum(auxs)
+
+    # -- serving ------------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_seq: int) -> Dict:
+        cfg = self.cfg
+        cache: Dict[str, Any] = {}
+        for i, lt in enumerate(cfg.pattern):
+            per_block = [init_layer_cache(lt, cfg, batch, max_seq, _dtype(cfg))
+                         for _ in range(cfg.n_blocks)]
+            cache[f"p{i}_{lt}"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *per_block)
+        return cache
+
+    def _run_with_cache(self, params, x, cache, index, positions,
+                        enc_out=None):
+        cfg = self.cfg
+
+        def block(h, xs):
+            h = self._constrain(h)
+            bp, bc = xs
+            new_bc = {}
+            aux = jnp.zeros((), jnp.float32)
+            for i, lt in enumerate(cfg.pattern):
+                key = f"p{i}_{lt}"
+                h, nc, a = apply_layer(lt, bp[key], h, cfg,
+                                       positions=positions, cache=bc[key],
+                                       cache_index=index, enc_out=enc_out)
+                new_bc[key] = nc
+                aux = aux + a
+            return h, (new_bc, aux)
+
+        x, (new_cache, auxs) = jax.lax.scan(
+            block, x, (params["blocks"], cache))
+        x = rms_norm(x, params["final_ln"].astype(x.dtype))
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = x @ head.astype(x.dtype)
+        if cfg.logits_fp32:
+            logits = logits.astype(jnp.float32)
+        return logits, new_cache
+
+    def prefill(self, params: Dict, tokens: jnp.ndarray, cache: Dict, *,
+                vision_embeds=None, mrope_positions=None, frames=None
+                ) -> Tuple[jnp.ndarray, Dict]:
+        """Fill the cache with S prompt tokens; logits for the last position."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        if vision_embeds is not None:
+            x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+        B, S, _ = x.shape
+        positions = (mrope_positions if cfg.mrope
+                     else jnp.broadcast_to(jnp.arange(S)[None], (B, S)))
+        enc_out = self.encode(params, frames) if frames is not None else None
+        logits, cache = self._run_with_cache(params, x, cache, 0, positions,
+                                             enc_out)
+        return logits[:, -1:], cache
+
+    def decode_step(self, params: Dict, tokens: jnp.ndarray, cache: Dict,
+                    index: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+        """One token per sequence. tokens: (B, 1); index: scalar position."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        B = x.shape[0]
+        if cfg.mrope:
+            positions = jnp.broadcast_to(
+                jnp.full((1, 1), 0, jnp.int32) + index, (B, 3, 1))
+        else:
+            positions = jnp.broadcast_to(index[None, None], (B, 1)
+                                         ).astype(jnp.int32)
+        return self._run_with_cache(params, x, cache, index, positions)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation) + step builders
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Dry-run inputs for (arch, shape): weak-type-correct, shardable."""
+    B, S = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    sds = jax.ShapeDtypeStruct
+    specs: Dict[str, Any] = {}
+    s_text = S - cfg.vision_tokens if cfg.vision_tokens else S
+    if shape.kind == "train":
+        specs["tokens"] = sds((B, s_text), i32)
+        specs["labels"] = sds((B, S), i32)
+        if cfg.vision_tokens:
+            specs["vision_embeds"] = sds((B, cfg.vision_tokens, cfg.d_model), dt)
+            specs["mrope_positions"] = sds((B, 3, S), i32)
+        if cfg.is_encdec:
+            specs["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), dt)
+    elif shape.kind == "prefill":
+        specs["tokens"] = sds((B, s_text), i32)
+        if cfg.vision_tokens:
+            specs["vision_embeds"] = sds((B, cfg.vision_tokens, cfg.d_model), dt)
+            specs["mrope_positions"] = sds((B, 3, S), i32)
+        if cfg.is_encdec:
+            specs["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), dt)
+    else:  # decode
+        specs["tokens"] = sds((B, 1), i32)
+        specs["index"] = sds((), i32)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict:
+    model = Model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))

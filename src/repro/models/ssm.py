@@ -1,0 +1,129 @@
+"""Mamba (S6) block — chunked selective scan, TPU-adapted.
+
+The CUDA reference fuses the selective scan into one kernel over time; on TPU
+we restructure as a *chunkwise* scan: ``lax.scan`` over sequence chunks with
+the intra-chunk recurrence unrolled as a first-order linear recurrence in
+log-space (cumulative products), which maps to VPU-friendly batched ops
+instead of a serial per-step kernel (DESIGN.md §2 hardware adaptation).
+State: (B, d_inner, d_state).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .components import _dtype, dense_init
+
+
+def mamba_init(rng, cfg: ArchConfig) -> Dict:
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(rng, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, cfg),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                   * (cfg.ssm_conv ** -0.5)).astype(_dtype(cfg)),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * st, cfg),
+        "dt_proj": dense_init(ks[3], dt_rank, di, cfg),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, cfg,
+                               scale=1.0 / max(cfg.n_layers, 1) ** 0.5),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d via shifted adds. x: (B, S, di); w: (K, di)."""
+    K = w.shape[0]
+    B, S, di = x.shape
+    if state is None:
+        hist = jnp.zeros((B, K - 1, di), x.dtype)
+    else:
+        hist = state.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)             # (B, S+K-1, di)
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i: i + S] * w[i]
+    new_state = xp[:, S:]                                # last K-1 inputs
+    return jax.nn.silu(out), new_state
+
+
+def _ssm_chunk(carry, xs, A):
+    """One chunk of the selective scan.
+
+    carry: h (B, di, st) fp32.  xs: dt (B, L, di), Bc (B, L, st),
+    Cc (B, L, st), u (B, L, di).  Returns updated carry and y (B, L, di).
+
+    h_t = a_t h_{t-1} + b_t solved with an intra-chunk associative scan on
+    (a, b) pairs; all decay factors a = exp(-dt*A) are in (0, 1], so the
+    parallel form is unconditionally stable (the naive divide-by-cumprod
+    prefix trick overflows for long chunks).
+    """
+    h0 = carry
+    dt, Bc, Cc, u = xs
+    la = -jnp.einsum("bld,dn->bldn", dt, A)              # log a_t  (negative)
+    a = jnp.exp(la)                                      # (B, L, di, st) <= 1
+    b = jnp.einsum("bld,bln->bldn", dt * u, Bc)          # input injection
+
+    def combine(left, right):
+        la_, lb_ = left
+        ra_, rb_ = right
+        return la_ * ra_, ra_ * lb_ + rb_
+
+    aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = aa * h0[:, None] + bb                            # (B, L, di, st)
+    y = jnp.einsum("bldn,bln->bld", h, Cc)
+    return h[:, -1], y
+
+
+def mamba_apply(p, x: jnp.ndarray, cfg: ArchConfig,
+                state: Optional[Tuple] = None):
+    """x: (B, S, d).  state=(conv_state, ssm_state) enables decode mode.
+
+    Returns (y, new_state); new_state is None when state is None and S is
+    chunk-divisible training/prefill (stateless full-sequence mode returns
+    the final state anyway — cheap and useful for prefill->decode handoff).
+    """
+    B, S, d = x.shape
+    di, st = cfg.d_inner, cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    conv_state = state[0] if state is not None else None
+    h0 = (state[1].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, di, st), jnp.float32))
+
+    xz = x @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                     # (B, S, di)
+    u, new_conv = _causal_conv(u, p["conv_w"], conv_state)
+    proj = u @ p["x_proj"]
+    dt_in, Bc, Cc = jnp.split(proj.astype(jnp.float32),
+                              [dt_rank, dt_rank + st], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])                 # (B, S, di)
+    A = jnp.exp(p["A_log"])                              # (di, st) positive
+    uf = u.astype(jnp.float32)
+
+    L = min(cfg.chunk, S)
+    if S % L == 0 and S > 1:
+        nch = S // L
+        resh = lambda t: t.reshape(B, nch, L, -1).swapaxes(0, 1)
+        xs = (resh(dt), resh(Bc), resh(Cc), resh(uf))
+        hN, ys = jax.lax.scan(lambda c, s: _ssm_chunk(c, s, A), h0, xs)
+        y = ys.swapaxes(0, 1).reshape(B, S, di)
+    else:                                                # decode / ragged
+        hN, y = _ssm_chunk(h0, (dt, Bc, Cc, uf), A)
+    y = y + uf * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, (new_conv, hN.astype(jnp.float32))
+
+
+def mamba_state_init(cfg: ArchConfig, batch: int):
+    return (jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), _dtype(cfg)),
+            jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32))

@@ -1,0 +1,192 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan with exponential gating + stabilizer).
+
+TPU adaptation: the mLSTM recurrence C_t = f_t C_{t-1} + i_t v_t k_t^T is
+evaluated chunkwise — intra-chunk as a masked attention-like einsum (MXU),
+inter-chunk as a ``lax.scan`` over the (B, H, hd, hd) matrix state — the
+same restructuring used for Mamba (serial CUDA kernel -> chunked MXU form).
+sLSTM keeps its inherently serial form (``lax.scan`` over time); its state
+is O(B*d) so the step is VPU-bound and tiny.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .components import _dtype, dense_init
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(rng, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.hd_x()
+    ks = jax.random.split(rng, 6)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * d, cfg),
+        "wq": dense_init(ks[1], d, H * hd, cfg),
+        "wk": dense_init(ks[2], d, H * hd, cfg),
+        "wv": dense_init(ks[3], d, H * hd, cfg),
+        "w_if": dense_init(ks[4], d, 2 * H, cfg),        # input/forget gates
+        "w_out": dense_init(ks[5], d, d, cfg,
+                            scale=1.0 / max(cfg.n_layers, 1) ** 0.5),
+    }
+
+
+def _mlstm_chunk(carry, xs):
+    """carry: (C, n, m): (B,H,hd,hd), (B,H,hd), (B,H).
+    xs: q,k,v (B,L,H,hd); logi, logf (B,L,H) log-gates (fp32)."""
+    C0, n0, m0 = carry
+    q, k, v, li, lf = xs
+    B, L, H, hd = q.shape
+    csum_f = jnp.cumsum(lf, axis=1)                      # (B, L, H)
+    # end-of-chunk stabilizer: max over local contributions
+    #   exp(csum_f_L - csum_f_j + li_j) and the decayed carry exp(m0 + csum_f_L)
+    local = csum_f[:, -1:] - csum_f + li                 # (B, L, H)
+    m_new = jnp.maximum(jnp.max(local, axis=1), m0 + csum_f[:, -1])
+    # intra-chunk attention-like term
+    #   s_ij = q_i . k_j * exp(li_j + sum_{j<t<=i} lf_t - m_i*)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("blhd,bshd->bhls", qf, kf) * (hd ** -0.5)
+    gate = (csum_f[:, :, None] - csum_f[:, None, :]
+            + li[:, None, :])                            # (B, L_i, L_j, H)
+    gate = jnp.moveaxis(gate, 3, 1)                      # (B, H, L, L)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    m_loc = jnp.max(jnp.where(causal, gate, -jnp.inf), axis=-1,
+                    keepdims=True)                       # (B, H, L, 1)
+    # running stabilizer per query position: max(local, decayed carry-in)
+    m_run = jnp.maximum(m_loc[..., 0],
+                        m0[:, :, None] + jnp.moveaxis(csum_f, 1, 2))
+    w = jnp.where(causal, jnp.exp(gate - m_run[..., None]), 0.0)
+    intra = jnp.einsum("bhls,bhls,bshd->blhd", scores, w, vf)
+    norm_intra = jnp.einsum("bhls,bhls->blh", scores, w)       # signed q.n
+    # inter-chunk: contribution of C0 decayed to each position
+    decay = jnp.exp(m0[:, None] + csum_f - m_run.transpose(0, 2, 1))
+    inter = jnp.einsum("blhd,bhde->blhe", qf, C0) * decay[..., None] \
+        * (hd ** -0.5)
+    norm_inter = jnp.einsum("blhd,bhd->blh", qf, n0) * decay * (hd ** -0.5)
+    num = intra + inter
+    # xLSTM normalizer: max(|q . n_t|, exp(-m_t)) with signed accumulation
+    den = jnp.maximum(jnp.abs(norm_intra + norm_inter),
+                      jnp.exp(-m_run.transpose(0, 2, 1)))
+    y = num / den[..., None]
+    # state update to end of chunk
+    tail_f = csum_f[:, -1:, :] - csum_f                  # decay from t to L
+    wgt = jnp.exp(tail_f + li - m_new[:, None])          # (B, L, H)
+    C_new = jnp.exp(m0 + csum_f[:, -1] - m_new)[..., None, None] * C0 \
+        + jnp.einsum("blh,blhd,blhe->bhde", wgt, kf, vf)
+    n_new = jnp.exp(m0 + csum_f[:, -1] - m_new)[..., None] * n0 \
+        + jnp.einsum("blh,blhd->bhd", wgt, kf)
+    return (C_new, n_new, m_new), y
+
+
+def mlstm_apply(p, x: jnp.ndarray, cfg: ArchConfig,
+                state: Optional[Tuple] = None):
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd_x()
+    up = x @ p["w_up"]
+    u, z = jnp.split(up, 2, axis=-1)
+    q = (u @ p["wq"]).reshape(B, S, H, hd)
+    k = (u @ p["wk"]).reshape(B, S, H, hd)
+    v = (u @ p["wv"]).reshape(B, S, H, hd)
+    gates = (u @ p["w_if"]).astype(jnp.float32).reshape(B, S, 2, H)
+    li = -jax.nn.softplus(-gates[:, :, 0])               # log sigmoid(i)
+    lf = -jax.nn.softplus(-gates[:, :, 1])               # log sigmoid(f)
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+    L = min(cfg.chunk, S)
+    if S % L == 0 and S > 1:
+        nch = S // L
+        resh = lambda t: t.reshape(B, nch, L, *t.shape[2:]).swapaxes(0, 1)
+        xs = (resh(q), resh(k), resh(v), resh(li), resh(lf))
+        (CN, nN, mN), ys = jax.lax.scan(_mlstm_chunk, (C0, n0, m0), xs)
+        y = ys.swapaxes(0, 1).reshape(B, S, H * hd)
+    else:
+        (CN, nN, mN), y = _mlstm_chunk((C0, n0, m0), (q, k, v, li, lf))
+        y = y.reshape(B, S, H * hd)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return out, (CN, nN, mN)
+
+
+def mlstm_state_init(cfg: ArchConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.hd_x()
+    return (jnp.zeros((batch, H, hd, hd), jnp.float32),
+            jnp.zeros((batch, H, hd), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(rng, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.hd_x()
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w_x": dense_init(k1, d, 4 * d, cfg),            # z, i, f, o pre-acts
+        "r_h": (jax.random.normal(k2, (H, hd, 4 * hd), jnp.float32)
+                * (hd ** -0.5)).astype(_dtype(cfg)),     # block-diag recurrent
+        "b": jnp.zeros((4 * d,), jnp.float32),
+    }
+
+
+def slstm_apply(p, x: jnp.ndarray, cfg: ArchConfig,
+                state: Optional[Tuple] = None):
+    """Sequential exponential-gated LSTM with normalizer/stabilizer state."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd_x()
+    # w_x is row-parallel (see sharding rules): the product arrives as ONE
+    # bf16 psum per layer and the sequential scan below runs collective-free
+    pre = (x @ p["w_x"]).astype(jnp.float32) + p["b"]    # (B, S, 4d)
+    if state is None:
+        h0 = jnp.zeros((B, H, hd), jnp.float32)
+        c0 = jnp.zeros((B, H, hd), jnp.float32)
+        n0 = jnp.ones((B, H, hd), jnp.float32)
+        m0 = jnp.zeros((B, H), jnp.float32)
+    else:
+        h0, c0, n0, m0 = state
+    rh = p["r_h"].astype(jnp.float32)
+
+    def step(carry, xt):
+        h, c, n, m = carry                               # (B,H,hd) x3, (B,H)
+        rec = jnp.einsum("bhd,hde->bhe", h, rh)          # (B, H, 4hd)
+        zifo = xt.reshape(B, H, 4 * hd) + rec
+        zz, ii, ff, oo = jnp.split(zifo, 4, axis=-1)
+        z = jnp.tanh(zz)
+        o = jax.nn.sigmoid(oo)
+        log_i = jnp.mean(ii, -1)                         # per-head gate
+        log_f = -jax.nn.softplus(-jnp.mean(ff, -1))
+        m_new = jnp.maximum(log_f + m, log_i)
+        i_s = jnp.exp(log_i - m_new)[..., None]
+        f_s = jnp.exp(log_f + m - m_new)[..., None]
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    xs = jnp.moveaxis(pre, 1, 0)                         # (S, B, 4d)
+    (hN, cN, nN, mN), ys = jax.lax.scan(step, (h0, c0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d).astype(x.dtype)
+    return y, (hN, cN, nN, mN)
+
+
+def slstm_state_init(cfg: ArchConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.hd_x()
+    return (jnp.zeros((batch, H, hd), jnp.float32),
+            jnp.zeros((batch, H, hd), jnp.float32),
+            jnp.ones((batch, H, hd), jnp.float32),
+            jnp.zeros((batch, H), jnp.float32))

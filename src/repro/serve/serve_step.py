@@ -1,0 +1,54 @@
+"""Serving steps: batched prefill and single-token decode with greedy/top-k
+sampling.  ``decode_32k`` / ``long_500k`` shape cells lower ``decode_step``
+(one new token against a seq_len-deep cache), not ``train_step``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.model import Model
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, cache, inputs: Dict[str, jnp.ndarray]):
+        kw = {k: inputs[k] for k in
+              ("vision_embeds", "mrope_positions", "frames") if k in inputs}
+        logits, cache = model.prefill(params, inputs["tokens"], cache, **kw)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)
+        return next_tok, cache
+    return prefill_step
+
+
+def make_decode_step(model: Model, temperature: float = 0.0) -> Callable:
+    def decode_step(params, cache, tokens, index, rng=None):
+        logits, cache = model.decode_step(params, tokens, cache, index)
+        last = logits[:, -1]
+        if temperature > 0.0 and rng is not None:
+            next_tok = jax.random.categorical(rng, last / temperature)
+        else:
+            next_tok = jnp.argmax(last, axis=-1)
+        return next_tok, cache
+    return decode_step
+
+
+def generate(model: Model, params, prompt: jnp.ndarray, max_new: int,
+             max_seq: int, inputs: Optional[Dict] = None) -> jnp.ndarray:
+    """Greedy generation driver (prefill + decode loop) — example/tests."""
+    B, S = prompt.shape
+    cache = model.init_cache(B, max_seq)
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model))
+    tok, cache = prefill(params, cache, {"tokens": prompt, **(inputs or {})})
+    toks = [tok]
+    # vision prefix shifts absolute positions
+    offset = model.cfg.vision_tokens if model.cfg.vision_tokens else 0
+    for i in range(max_new - 1):
+        tok, cache = decode(params, cache, tok[:, None],
+                            jnp.asarray(S + offset + i, jnp.int32))
+        toks.append(tok)
+    return jnp.stack(toks, axis=1)

@@ -1,0 +1,2 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, lr_at
+from .train_step import TrainOptions, TrainState, init_state, make_train_step

@@ -1,0 +1,13 @@
+import os
+
+# Tests must see the real device count (1 CPU), never the dry-run's 512
+# fake devices — keep XLA_FLAGS untouched here on purpose.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

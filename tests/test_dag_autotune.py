@@ -1,0 +1,90 @@
+"""DAG proxy engine + auto-tuner behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ComponentParams, Edge, ProxyBenchmark, ProxyDAG,
+                        autotune, proxy_from_dwarf_weights, vector_accuracy)
+
+
+def _mini_dag(weight=2, size=4096):
+    return ProxyDAG(
+        name="mini",
+        sources={"src": size},
+        edges=[
+            Edge("matrix_multiplication", ["src"], "mm",
+                 ComponentParams(data_size=size, chunk_size=64, weight=weight)),
+            Edge("quick_sort", ["mm"], "out",
+                 ComponentParams(data_size=size, chunk_size=256, weight=1)),
+        ],
+        sink="out")
+
+
+def test_dag_builds_and_runs(rng):
+    fn = _mini_dag().build()
+    out = jax.jit(fn)(rng)
+    assert np.isfinite(float(out))
+
+
+def test_dag_validates_topology():
+    bad = ProxyDAG("bad", {"src": 128},
+                   [Edge("quick_sort", ["missing"], "out",
+                         ComponentParams())], "out")
+    with pytest.raises(ValueError):
+        bad.build()
+
+
+def test_weight_zero_edge_is_identity_passthrough(rng):
+    d1 = _mini_dag(weight=0)
+    d2 = _mini_dag(weight=2)
+    p1 = ProxyBenchmark(d1).profile(execute=False)
+    p2 = ProxyBenchmark(d2).profile(execute=False)
+    assert p1.report.flops < p2.report.flops
+
+
+def test_weight_scales_cost(rng):
+    f1 = ProxyBenchmark(_mini_dag(weight=1)).profile(execute=False)
+    f4 = ProxyBenchmark(_mini_dag(weight=4)).profile(execute=False)
+    assert f4.report.flops > 2.5 * f1.report.flops
+
+
+def test_param_space_includes_extras():
+    dag = ProxyDAG("x", {"src": 256},
+                   [Edge("euclidean_distance", ["src"], "o",
+                         ComponentParams(extra={"centers": 8}))], "o")
+    fields = {f for _, f in dag.param_space()}
+    assert {"data_size", "chunk_size", "parallelism", "weight",
+            "centers"} <= fields
+
+
+def test_proxy_from_dwarf_weights_structure():
+    px = proxy_from_dwarf_weights("auto", {"sort": 0.7, "sampling": 0.1,
+                                           "graph": 0.2})
+    dwarfs = [e.component for e in px.dag.edges]
+    assert len(dwarfs) == 3
+    # heaviest dwarf gets the largest repeat weight
+    weights = {e.component: e.params.weight for e in px.dag.edges}
+    assert max(weights.values()) == weights[px.dag.edges[0].component]
+
+
+def test_autotune_converges_to_known_target(rng):
+    # target = a proxy with different parameters; the tuner must recover a
+    # metric match within tolerance (paper: adjust/feedback to <=15% dev)
+    target_dag = _mini_dag(weight=4, size=16384)
+    target = ProxyBenchmark(target_dag).profile(execute=False).metrics
+    start = ProxyBenchmark(_mini_dag(weight=1, size=4096))
+    res = autotune(start, target, tol=0.15, max_iter=15)
+    assert res.final_accuracy["avg"] > res.initial_accuracy["avg"]
+    assert res.final_accuracy["avg"] > 0.85
+    assert res.profiles_run > 5
+    assert res.history  # adjust/feedback steps recorded
+
+
+def test_autotune_summary_readable():
+    target_dag = _mini_dag(weight=2)
+    target = ProxyBenchmark(target_dag).profile(execute=False).metrics
+    res = autotune(ProxyBenchmark(_mini_dag(weight=1)), target, max_iter=3)
+    s = res.summary()
+    assert "autotune[mini]" in s

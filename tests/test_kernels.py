@@ -1,0 +1,79 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.hash_mix import hash_mix, hash_mix_ref
+from repro.kernels.matmul import matmul, matmul_ref
+from repro.kernels.topk import topk, topk_ref
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,Kv,hd,causal", [
+    (1, 128, 128, 4, 4, 32, True),
+    (2, 64, 192, 8, 2, 64, True),      # GQA + rectangular
+    (1, 200, 200, 4, 1, 32, True),     # MQA + non-divisible (padding)
+    (2, 96, 96, 6, 3, 16, False),      # non-causal
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, Sq, Skv, H, Kv, hd, causal, dtype, rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Kv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Kv, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=causal
+                        ).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 192, 64),
+                                   (100, 70, 50), (8, 1024, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_matches_ref(M, K, N, dtype, rng):
+    k1, k2 = jax.random.split(rng)
+    a = jax.random.normal(k1, (M, K), dtype)
+    b = jax.random.normal(k2, (K, N), dtype)
+    out = matmul(a, b, block_m=64, block_n=64, block_k=64)
+    ref = matmul_ref(a, b)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol * K)
+
+
+@pytest.mark.parametrize("M,N,k", [(64, 128, 8), (100, 40, 4), (256, 512, 1)])
+def test_topk_matches_ref(M, N, k, rng):
+    x = jax.random.normal(rng, (M, N), jnp.float32)
+    v1, i1 = topk(x, k, block_m=64)
+    v2, i2 = topk_ref(x, k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
+@pytest.mark.parametrize("n,rounds", [(1000, 1), (4096, 3), (33, 2)])
+def test_hash_mix_matches_ref(n, rounds, rng):
+    u = jax.random.bits(rng, (n,), jnp.uint32)
+    a = hash_mix(u, rounds=rounds)
+    b = hash_mix_ref(u, rounds)
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_flash_attention_decode_shape(rng):
+    """q_len=1 against a deep cache — the decode cell's access pattern."""
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (2, 1, 8, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 512, 2, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, block_q=8, block_kv=128)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=False
+                        ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,119 @@
+"""HLO cost analyzer: exactness vs XLA on straight-line code, trip-count
+correction on scans, Eq.1 accuracy semantics, roofline terms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metrics import (HW_V5E, analyze_hlo_text, eq1_accuracy,
+                                metric_accuracy, metric_vector,
+                                roofline_from_report, vector_accuracy)
+
+
+def _analyze(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return analyze_hlo_text(compiled.as_text()), compiled
+
+
+def test_dot_flops_exact():
+    a = jnp.zeros((64, 128), jnp.float32)
+    b = jnp.zeros((128, 32), jnp.float32)
+    rep, compiled = _analyze(lambda a, b: a @ b, a, b)
+    expect = 2 * 64 * 128 * 32
+    assert rep.flops == expect
+    xla = compiled.cost_analysis()
+    assert abs(rep.flops - xla["flops"]) / expect < 0.01
+
+
+def test_scan_trip_count_multiplies_flops():
+    w = jnp.zeros((64, 64), jnp.float32)
+    x = jnp.zeros((8, 64), jnp.float32)
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), ()
+        y, _ = jax.lax.scan(body, x, None, length=11)
+        return y
+
+    rep, compiled = _analyze(f, x, w)
+    per_iter = 2 * 8 * 64 * 64
+    assert rep.flops == pytest.approx(11 * per_iter, rel=0.01)
+    # XLA's own analysis counts the body once — the bug we correct
+    xla = compiled.cost_analysis()
+    assert xla["flops"] < rep.flops / 5
+    assert rep.while_trip_counts == [11]
+
+
+def test_nested_scan_trip_counts_compound():
+    x = jnp.zeros((4, 16), jnp.float32)
+    w = jnp.zeros((16, 16), jnp.float32)
+
+    def inner(c, w):
+        def body(c, _):
+            return c @ w, ()
+        c, _ = jax.lax.scan(body, c, None, length=3)
+        return c
+
+    def f(x, w):
+        def body(c, _):
+            return inner(c, w), ()
+        y, _ = jax.lax.scan(body, x, None, length=5)
+        return y
+
+    rep, _ = _analyze(f, x, w)
+    per_iter = 2 * 4 * 16 * 16
+    assert rep.flops == pytest.approx(15 * per_iter, rel=0.01)
+
+
+def test_collective_bytes_detected():
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device")
+
+
+def test_dynamic_slice_counts_touched_bytes_only():
+    big = jnp.zeros((1 << 16, 64), jnp.float32)
+
+    def f(x):
+        def body(c, i):
+            sl = jax.lax.dynamic_slice(x, (i * 8, 0), (8, 64))
+            return c + sl.sum(), ()
+        out, _ = jax.lax.scan(body, 0.0, jnp.arange(64))
+        return out
+
+    rep, _ = _analyze(f, big)
+    # touched: 64 iterations x 8x64 rows; full operand would be 64x16MB
+    assert rep.bytes_accessed < 16e6
+
+
+def test_eq1_accuracy_semantics():
+    assert eq1_accuracy(100.0, 100.0) == 1.0
+    assert eq1_accuracy(100.0, 90.0) == pytest.approx(0.9)
+    assert eq1_accuracy(100.0, 250.0) == 0.0          # clipped
+    assert metric_accuracy("mix_dot", 0.5, 0.4) == pytest.approx(0.9)
+    assert metric_accuracy("mix_dot", 0.001, 0.011) == pytest.approx(0.99)
+
+
+def test_vector_accuracy_weighted_avg():
+    t = {"flops": 100.0, "mix_dot": 0.5}
+    p = {"flops": 90.0, "mix_dot": 0.5}
+    acc = vector_accuracy(t, p)
+    assert acc["avg"] == pytest.approx((0.9 + 1.0) / 2)
+
+
+def test_roofline_terms_and_dominance():
+    a = jnp.zeros((512, 512), jnp.float32)
+    rep, _ = _analyze(lambda a: a @ a, a)
+    roof = roofline_from_report(rep, chips=1, model_flops=2 * 512 ** 3)
+    assert roof.compute_s == pytest.approx(rep.flops / HW_V5E.peak_flops_bf16)
+    assert roof.memory_s == pytest.approx(rep.bytes_accessed / HW_V5E.hbm_bw)
+    assert roof.dominant in ("compute", "memory", "collective")
+    assert 0.0 < roof.useful_flops_ratio <= 1.05
+
+
+def test_metric_vector_mix_shares_sum_to_one():
+    a = jnp.zeros((128, 128), jnp.float32)
+    rep, _ = _analyze(lambda a: jnp.sort(a @ a, axis=-1).sum(), a)
+    vec = metric_vector(rep)
+    mix = sum(v for k, v in vec.items() if k.startswith("mix_"))
+    assert mix == pytest.approx(1.0, abs=1e-6)

@@ -1,0 +1,77 @@
+"""Per-arch reduced-config smoke: forward + one train step on CPU.
+
+(The FULL configs are exercised AOT-only via the dry-run.)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import Model
+from repro.train import AdamWConfig, TrainOptions, init_state, make_train_step
+
+
+def _batch(cfg, rng, B=2, S=32):
+    s_text = S
+    batch = {}
+    if cfg.vision_tokens:
+        s_text = S - cfg.vision_tokens if S > cfg.vision_tokens else S
+        batch["vision_embeds"] = jax.random.normal(
+            jax.random.fold_in(rng, 2),
+            (B, cfg.vision_tokens, cfg.d_model), jnp.float32)
+        total = s_text + cfg.vision_tokens
+        batch["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(total)[None, None], (B, 3, total)).astype(jnp.int32)
+        batch["labels"] = jax.random.randint(
+            jax.random.fold_in(rng, 3), (B, total), 0, cfg.vocab)
+    else:
+        batch["labels"] = jax.random.randint(
+            jax.random.fold_in(rng, 3), (B, s_text), 0, cfg.vocab)
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(rng, 4), (B, cfg.encoder_seq, cfg.d_model),
+            jnp.float32)
+    batch["tokens"] = jax.random.randint(rng, (B, s_text), 0, cfg.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_forward_shapes_no_nans(arch, rng):
+    cfg = ARCHS[arch].reduced()
+    model = Model(cfg)
+    params = model.init(rng)
+    batch = _batch(cfg, rng)
+    kw = {k: batch[k] for k in
+          ("vision_embeds", "mrope_positions", "frames") if k in batch}
+    logits, aux = jax.jit(lambda p, t: model.forward(p, t, **kw))(
+        params, batch["tokens"])
+    S_out = batch["labels"].shape[1]
+    assert logits.shape == (2, S_out, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_train_step(arch, rng):
+    cfg = ARCHS[arch].reduced()
+    model = Model(cfg)
+    state = init_state(model, rng)
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3),
+                                   TrainOptions()))
+    state, metrics = step(state, _batch(cfg, rng))
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(state.step) == 1
+
+
+def test_param_counts_match_published_sizes():
+    # within 25% of the advertised parameter counts
+    expect = {"qwen2-7b": 7.6e9, "tinyllama-1.1b": 1.1e9,
+              "kimi-k2-1t-a32b": 1.0e12, "xlstm-1.3b": 1.3e9}
+    for name, n in expect.items():
+        got = ARCHS[name].param_count()
+        assert abs(got - n) / n < 0.25, (name, got)
+    # MoE active counts
+    assert abs(ARCHS["kimi-k2-1t-a32b"].active_param_count() - 32e9) / 32e9 < 0.15

@@ -1,0 +1,123 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dwarfs import ComponentParams
+from repro.core.dwarfs.base import fit_buffer
+from repro.core.metrics import (eq1_accuracy, metric_accuracy, parse_shapes,
+                                shape_bytes, vector_accuracy)
+from repro.models.components import moe_apply, sdpa, blockwise_sdpa
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(h=st.floats(-1e6, 1e6, allow_nan=False),
+       p=st.floats(-1e6, 1e6, allow_nan=False))
+@settings(**SETTINGS)
+def test_eq1_accuracy_bounded(h, p):
+    a = eq1_accuracy(h, p)
+    assert 0.0 <= a <= 1.0
+    if h == p:
+        assert a == 1.0
+
+
+@given(share_h=st.floats(0, 1), share_p=st.floats(0, 1))
+@settings(**SETTINGS)
+def test_mix_accuracy_symmetric_bounded(share_h, share_p):
+    a = metric_accuracy("mix_dot", share_h, share_p)
+    b = metric_accuracy("mix_dot", share_p, share_h)
+    assert a == pytest.approx(b)
+    assert 0.0 <= a <= 1.0
+
+
+@given(n=st.integers(1, 5000), m=st.integers(1, 5000))
+@settings(**SETTINGS)
+def test_fit_buffer_always_exact_length(n, m):
+    x = jnp.arange(n, dtype=jnp.float32)
+    y = fit_buffer(x, m)
+    assert y.shape == (m,)
+
+
+@given(data_size=st.integers(1, 1 << 22), chunk=st.integers(1, 1 << 16),
+       par=st.integers(-5, 1000), weight=st.integers(-3, 500))
+@settings(**SETTINGS)
+def test_component_params_rounding_invariants(data_size, chunk, par, weight):
+    p = ComponentParams(data_size, chunk, par, weight).rounded()
+    assert p.chunk_size >= 8 and p.chunk_size % 8 == 0
+    assert p.data_size >= p.chunk_size
+    assert p.data_size % p.chunk_size == 0
+    assert 1 <= p.parallelism <= 256
+    assert 0 <= p.weight <= 128
+
+
+@given(st.text(alphabet="abcdefxyz0123456789[],() ", max_size=60))
+@settings(**SETTINGS)
+def test_shape_parser_never_crashes(s):
+    shapes = parse_shapes(s)
+    assert shape_bytes(shapes) >= 0
+
+
+@given(sq=st.integers(1, 64), skv=st.integers(1, 96),
+       h=st.sampled_from([2, 4]), kv=st.sampled_from([1, 2]),
+       causal=st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_blockwise_equals_naive_sdpa(sq, skv, h, kv, causal):
+    if h % kv:
+        kv = 1
+    rng = jax.random.PRNGKey(sq * 1000 + skv)
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (1, sq, h, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, skv, kv, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, skv, kv, 16), jnp.float32)
+    a = sdpa(q, k, v, causal=causal)
+    b = blockwise_sdpa(q, k, v, causal=causal, block_q=16, block_kv=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_no_drop_equals_dense_reference(rng):
+    """With capacity_factor high enough to avoid drops, routed MoE output
+    must equal the dense gather-per-token reference."""
+    import dataclasses
+    from repro.configs import ARCHS
+    from repro.models.components import moe_init
+
+    cfg = dataclasses.replace(
+        ARCHS["granite-moe-3b-a800m"].reduced(),
+        moe_capacity_factor=8.0, moe_groups=2)
+    p = moe_init(rng, cfg)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    out, aux = moe_apply(p, x, cfg)
+
+    # dense reference: every token through its top-k experts
+    xt = x.reshape(-1, cfg.d_model)
+    logits = (xt @ p["router"]).astype(jnp.float32)
+    gate, eidx = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.moe_topk)
+    gate = gate / gate.sum(-1, keepdims=True)
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    ys = []
+    for t in range(xt.shape[0]):
+        acc = 0.0
+        for j in range(cfg.moe_topk):
+            e = int(eidx[t, j])
+            h = jax.nn.silu(xt[t] @ wg[e]) * (xt[t] @ wu[e])
+            acc = acc + gate[t, j] * (h @ wd[e])
+        ys.append(acc)
+    ref = jnp.stack(ys).reshape(x.shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+    assert float(aux) > 0
+
+
+@given(b=st.integers(1, 3), s=st.integers(4, 32))
+@settings(max_examples=8, deadline=None)
+def test_vector_accuracy_avg_bounded(b, s):
+    t = {"flops": float(b * s), "mix_dot": 0.5}
+    p = {"flops": float(b), "mix_dot": 0.9}
+    acc = vector_accuracy(t, p)
+    assert 0.0 <= acc["avg"] <= 1.0

@@ -1,0 +1,87 @@
+"""Sharding-rule validity for every arch on both production meshes.
+
+Uses AbstractMesh — no fake devices needed; checks every assigned axis
+divides its dimension (the no-uneven-shards invariant) for params, inputs
+and caches, full-size configs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, cell_is_supported
+from repro.distributed.sharding import (batch_spec_axis, cache_specs_tree,
+                                        param_specs)
+from repro.models.model import Model, cache_specs, input_specs
+
+
+def _meshes():
+    yield AbstractMesh((16, 16), ("data", "model"))
+    yield AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _axis_size(mesh, axis):
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _check_tree(tree_specs, tree_shapes, mesh, where):
+    leaves_s = jax.tree.leaves(tree_specs, is_leaf=lambda x: isinstance(x, P))
+    leaves_v = jax.tree.leaves(tree_shapes)
+    assert len(leaves_s) == len(leaves_v)
+    for spec, val in zip(leaves_s, leaves_v):
+        for dim, axis in zip(val.shape, tuple(spec)):
+            if axis is None:
+                continue
+            size = _axis_size(mesh, axis)
+            assert dim % size == 0, (where, val.shape, tuple(spec), axis)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_divisible_all_meshes(arch):
+    cfg = ARCHS[arch]
+    model = Model(cfg)
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    for mesh in _meshes():
+        specs = param_specs(params_sds, mesh, cfg=cfg)
+        _check_tree(specs, params_sds, mesh, arch)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_cache_specs_divisible(arch):
+    cfg = ARCHS[arch]
+    for shape_name in ("decode_32k", "long_500k"):
+        shape = SHAPES[shape_name]
+        ok, _ = cell_is_supported(cfg, shape)
+        if not ok:
+            continue
+        sds = cache_specs(cfg, shape)
+        for mesh in _meshes():
+            specs = cache_specs_tree(cfg, sds, mesh)
+            _check_tree(specs, sds, mesh, (arch, shape_name))
+
+
+def test_batch_spec_axis_prefers_full_dp():
+    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    assert batch_spec_axis(mesh, 256) == ("pod", "data")
+    assert batch_spec_axis(mesh, 16) == "data"
+    assert batch_spec_axis(mesh, 1) is None
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_input_specs_exist_for_all_supported_cells(arch):
+    cfg = ARCHS[arch]
+    for shape in SHAPES.values():
+        ok, why = cell_is_supported(cfg, shape)
+        if not ok:
+            assert "full-attention" in why
+            continue
+        specs = input_specs(cfg, shape)
+        assert "tokens" in specs
+        if shape.kind == "train":
+            assert "labels" in specs
+        if shape.kind == "decode":
+            assert specs["tokens"].shape[1] == 1

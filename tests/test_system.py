@@ -1,0 +1,42 @@
+"""End-to-end behaviour of the paper's system: profile a workload ->
+decompose to dwarfs -> build proxy -> autotune -> validate accuracy+speedup.
+
+This is the paper's Fig. 2 pipeline executed on the smallest workload.
+"""
+
+import jax
+import numpy as np
+
+from repro.core import (characterize, decompose_to_dwarfs,
+                        proxy_from_dwarf_weights, vector_accuracy)
+from repro.core.autotune import autotune
+from repro.core.metrics import REPORT_METRICS
+from repro.core.workloads import WORKLOADS, workload_step_fn
+
+
+def test_full_methodology_pipeline_kmeans():
+    fn, args = workload_step_fn("kmeans", "tiny")
+    prof = characterize(fn, args, name="kmeans", execute=True, exec_iters=1)
+
+    weights = decompose_to_dwarfs(prof.report)
+    assert weights["matrix"] > 0.3          # kmeans is matrix-dominant
+
+    proxy = WORKLOADS["kmeans"].make_proxy()
+    res = autotune(proxy, prof.metrics, tol=0.15, max_iter=12)
+    assert res.final_accuracy["avg"] >= res.initial_accuracy["avg"]
+
+    pp = res.proxy.profile(execute=True, exec_iters=1)
+    acc = vector_accuracy(prof.metrics, pp.metrics,
+                          keys=[k for k in REPORT_METRICS
+                                if k in prof.metrics and not
+                                k.startswith(("mips", "flop_rate", "mem_bw"))])
+    assert acc["avg"] > 0.6                  # structural match at tiny scale
+
+
+def test_auto_proxy_from_decomposition_runs():
+    fn, args = workload_step_fn("pagerank", "tiny")
+    prof = characterize(fn, args, name="pagerank", execute=False)
+    weights = decompose_to_dwarfs(prof.report)
+    px = proxy_from_dwarf_weights("auto_pagerank", weights, base_size=1 << 12)
+    out = jax.jit(px.dag.build())(jax.random.PRNGKey(0))
+    assert np.isfinite(float(out))
