@@ -9,16 +9,12 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from pathlib import Path
 from typing import Dict, Optional, Tuple
 
-import jax
-
+from repro.api import ProxySpec
 from repro.core import (ProxyBenchmark, characterize, vector_accuracy)
-from repro.core.autotune import DEFAULT_METRICS, autotune
-from repro.core.dag import Edge, ProxyDAG
-from repro.core.dwarfs import ComponentParams
+from repro.core.autotune import autotune
 from repro.core.metrics import REPORT_METRICS
 from repro.core.workloads import WORKLOADS, workload_step_fn
 
@@ -32,15 +28,8 @@ RATE_KEYS = ("mips", "mem_bw", "flop_rate")
 
 
 def _proxy_from_json(d: Dict) -> ProxyBenchmark:
-    dag = ProxyDAG(
-        name=d["name"], sources={k: int(v) for k, v in d["sources"].items()},
-        edges=[Edge(e["component"], e["src"], e["dst"],
-                    ComponentParams(e["data_size"], e["chunk_size"],
-                                    e["parallelism"], e["weight"],
-                                    dict(e["extra"])))
-               for e in d["edges"]],
-        sink=d["sink"])
-    return ProxyBenchmark(dag)
+    # accepts current versioned specs and the seed's legacy bare-DAG dicts
+    return ProxySpec.from_json(d).to_benchmark()
 
 
 def original_profile(name: str, scale: str, execute: bool = True,
@@ -72,7 +61,8 @@ def tuned_proxy(name: str) -> Tuple[ProxyBenchmark, Dict]:
         "rates": {"converged": res2.converged, "iters": res2.iterations,
                   "acc": res2.final_accuracy},
     }
-    path.write_text(json.dumps({"dag": res2.proxy.dag.to_json(),
+    spec = ProxySpec.from_benchmark(res2.proxy, scale=SCALE)
+    path.write_text(json.dumps({"dag": spec.to_json(),
                                 "tune_info": info}, indent=1))
     return res2.proxy, info
 

@@ -5,17 +5,15 @@
 
 from __future__ import annotations
 
-import json
-import time
-from typing import Dict, List
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ParamSpace, get_stack
 from repro.core import characterize, decompose_to_dwarfs, vector_accuracy
 from repro.core.metrics import REPORT_METRICS
-from repro.core.stacks import hadoop, openmp
 from repro.core.workloads import SCALES, WORKLOADS, kmeans_sparse_step, \
     workload_step_fn
 from repro.data import gen_records, gen_sparse_csr, gen_matrix
@@ -81,19 +79,16 @@ def bench_fig7_io() -> List[str]:
     n = SCALES[SCALE]["terasort_n"]
     keys, _ = gen_records(rng, n)
 
-    t0 = time.perf_counter()
-    _, io_orig = hadoop(lambda c: jnp.sort(c.reshape(-1)),
-                        lambda x: jnp.sort(x), keys, n_chunks=8)
-    t_orig = time.perf_counter() - t0
-    bw_orig = io_orig / t_orig
+    hstack = get_stack("hadoop")
+    rep_orig = hstack.map_reduce(lambda c: jnp.sort(c.reshape(-1)),
+                                 lambda x: jnp.sort(x), keys, n_chunks=8)
+    bw_orig = rep_orig.io_bandwidth
 
     proxy, _ = tuned_proxy("terasort")
     pkeys = jax.random.bits(rng, (max(4096, n // 8),), jnp.uint32)
-    t0 = time.perf_counter()
-    _, io_px = hadoop(lambda c: jnp.sort(c.reshape(-1)),
-                      lambda x: jnp.sort(x), pkeys, n_chunks=8)
-    t_px = time.perf_counter() - t0
-    bw_px = io_px / t_px
+    rep_px = hstack.map_reduce(lambda c: jnp.sort(c.reshape(-1)),
+                               lambda x: jnp.sort(x), pkeys, n_chunks=8)
+    bw_px = rep_px.io_bandwidth
     acc = 1.0 - abs(bw_px - bw_orig) / bw_orig
     rows.append(csv_row(
         "fig7/terasort_io", bw_orig / 1e6,
@@ -153,11 +148,14 @@ def bench_fig11_scaling() -> List[str]:
             prof = original_profile(name, scale, execute=True, exec_iters=2)
             times_o.append(prof.exec_s)
         base = proxy.profile(execute=True, exec_iters=2).exec_s
-        # proxy scaled down by the same input ratio
+        # proxy scaled down by the same input ratio (pytree parameter space)
         small = proxy.clone()
-        for i, _ in enumerate(small.dag.edges):
-            small.dag.set_param(i, "data_size",
-                                max(256, small.dag.get_param(i, "data_size") / 16))
+        space = ParamSpace.from_dag(small.dag)
+        vec = space.values(small.dag)
+        for li, leaf in enumerate(space.leaves):
+            if leaf.field == "data_size":
+                vec[li] = max(256, vec[li] / 16)
+        space.apply(small.dag, vec)
         times_p = [small.profile(execute=True, exec_iters=2).exec_s, base]
         trend_o = times_o[1] / max(times_o[0], 1e-9)
         trend_p = times_p[1] / max(times_p[0], 1e-9)

@@ -1,23 +1,27 @@
 """Paper reproduction, single workload: Proxy TeraSort vs 'Hadoop' TeraSort.
 
-Mirrors the paper's §3: run the original at full scale (gensort-style
-records, sample->partition->sort->count pipeline with Hadoop-style host
-spills), then the tuned Table-3 proxy, and print the Table-6/Fig-5 numbers.
+Mirrors the paper's §3 through the unified execution API: profile the
+original at scale, emit the Table-3 proxy as a versioned spec, load it
+back, run it on the ``openmp`` and ``hadoop`` stacks via the uniform
+``Stack.run()`` contract, auto-tune over the pytree parameter space, and
+print the Table-6/Fig-5 numbers.
 
 Run:  PYTHONPATH=src python examples/proxy_terasort.py [--scale small|full]
 """
 
 import argparse
-import time
+import json
+import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
 
+from repro.api import ProxySpec, get_stack
 from repro.core import characterize, vector_accuracy
 from repro.core.autotune import autotune
 from repro.core.metrics import REPORT_METRICS
-from repro.core.stacks import hadoop
-from repro.core.workloads import SCALES, WORKLOADS, workload_step_fn
+from repro.core.workloads import PROXY_SPECS, SCALES, workload_step_fn
 from repro.data import gen_records
 
 
@@ -34,16 +38,28 @@ def main():
 
     # Hadoop-substrate run with host-spilled intermediates (the I/O axis)
     keys, _ = gen_records(jax.random.PRNGKey(0), SCALES[args.scale]["terasort_n"])
-    t0 = time.perf_counter()
-    _, io_bytes = hadoop(lambda c: jnp.sort(c.reshape(-1)),
-                         lambda x: jnp.sort(x), keys, n_chunks=8)
-    t = time.perf_counter() - t0
-    print(f"   hadoop-substrate: {t:.2f} s, spill {io_bytes/1e6:.0f} MB "
-          f"({io_bytes/t/1e6:.0f} MB/s)")
+    rep = get_stack("hadoop").map_reduce(
+        lambda c: jnp.sort(c.reshape(-1)), lambda x: jnp.sort(x), keys,
+        n_chunks=8)
+    print(f"   hadoop-substrate: {rep.wall_s:.2f} s, spill "
+          f"{rep.io_bytes/1e6:.0f} MB ({rep.io_bandwidth/1e6:.0f} MB/s)")
 
-    print("== Proxy TeraSort (Table 3: 70% sort / 10% sampling / 20% graph) ==")
-    res = autotune(WORKLOADS["terasort"].make_proxy(), orig.metrics,
-                   tol=0.15, max_iter=20)
+    print("== Proxy TeraSort spec round-trip (versioned ProxySpec) ==")
+    with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as f:
+        json.dump(PROXY_SPECS["terasort"], f)
+    try:
+        spec = ProxySpec.load(f.name)
+    finally:
+        os.unlink(f.name)
+    print(f"   spec v{spec.spec_version}: {len(spec.edges)} edges, "
+          f"default stack={spec.stack!r}")
+    for stack_name in ("openmp", "hadoop"):
+        r = get_stack(stack_name).run(spec)
+        print(f"   run[{stack_name:7s}] wall={r.wall_s:.3f}s "
+              f"io={r.io_bytes/1e3:.0f} kB")
+
+    print("== Auto-tune over the pytree parameter space ==")
+    res = autotune(spec.to_benchmark(), orig.metrics, tol=0.15, max_iter=20)
     pp = res.proxy.profile(execute=True, exec_iters=3)
     keys_m = [k for k in REPORT_METRICS if k in orig.metrics]
     acc = vector_accuracy(orig.metrics, pp.metrics, keys=keys_m)

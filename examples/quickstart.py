@@ -2,19 +2,21 @@
 
   1. profile an original workload (JAX Kmeans)        — 'perf' stage
   2. decompose its HLO cost channels into dwarfs      — hotspot analysis
-  3. build a DAG proxy benchmark from Table-3 parts   — proxy construction
-  4. auto-tune it to the original's metric vector     — adjust/feedback
-  5. report Eq.1 accuracy + runtime speedup           — Fig.5/Table-6 style
+  3. load the Table-3 proxy from its versioned spec   — proxy construction
+  4. run it on a software stack via Stack.run()       — uniform execution
+  5. auto-tune over the pytree parameter space        — adjust/feedback
+  6. report Eq.1 accuracy + runtime speedup           — Fig.5/Table-6 style
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
 
+from repro.api import ProxySpec, get_stack
 from repro.core import characterize, decompose_to_dwarfs, vector_accuracy
 from repro.core.autotune import autotune
 from repro.core.metrics import REPORT_METRICS
-from repro.core.workloads import WORKLOADS, workload_step_fn
+from repro.core.workloads import PROXY_SPECS, workload_step_fn
 
 
 def main():
@@ -31,13 +33,24 @@ def main():
         if w > 0.01:
             print(f"   {dwarf:10s} {w:.2f}")
 
-    print("== 3+4. Table-3 proxy, auto-tuned (<=15% deviation target) ==")
-    proxy = WORKLOADS["kmeans"].make_proxy()
+    print("== 3. load the Table-3 proxy from its spec ==")
+    spec = ProxySpec.from_json(PROXY_SPECS["kmeans"])
+    proxy = spec.to_benchmark()
+    print(f"   {spec.name}: v{spec.spec_version}, {len(spec.edges)} edges, "
+          f"default stack={spec.stack!r}")
+
+    print("== 4. uniform execution on a software stack ==")
+    rep = get_stack(spec.stack).run(spec, rng=jax.random.PRNGKey(0))
+    print(f"   run[{spec.stack}] wall={rep.wall_s:.3f}s "
+          f"io={rep.io_bytes:.0f} B")
+
+    print("== 5. auto-tune over the pytree parameter space "
+          "(<=15% deviation) ==")
     res = autotune(proxy, orig.metrics, tol=0.15, max_iter=20)
     print(f"   converged={res.converged} after {res.iterations} iterations "
           f"({res.profiles_run} profiles)")
 
-    print("== 5. validation ==")
+    print("== 6. validation ==")
     pp = res.proxy.profile(execute=True, exec_iters=2)
     keys = [k for k in REPORT_METRICS if k in orig.metrics]
     acc = vector_accuracy(orig.metrics, pp.metrics, keys=keys)

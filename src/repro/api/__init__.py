@@ -1,0 +1,37 @@
+"""repro.api — the unified execution API of the dwarf methodology.
+
+Three public surfaces, one contract:
+
+* **Stack protocol** (:mod:`repro.api.stack`): ``get_stack(name).run(x)``
+  executes any proxy DAG, workload, or raw fn on any software stack
+  (openmp / mpi / spark / hadoop) and returns a uniform :class:`RunReport`.
+* **Versioned ProxySpec** (:mod:`repro.api.spec`): declarative,
+  schema-validated JSON specs with a full ``to_json``/``from_json``
+  round-trip.
+* **Pytree parameter space** (:mod:`repro.api.params`): every tunable
+  flattened into a named, bounded vector for the auto-tuner and for
+  gradient-free vectorized tuners.
+
+Quickstart::
+
+    from repro.api import ProxySpec, get_stack
+    spec = ProxySpec.load("proxy_terasort.json")
+    report = get_stack(spec.stack).run(spec)
+    print(report.wall_s, report.io_bytes)
+"""
+
+from . import params as params  # imported first: no repro.core dependencies
+from .params import (CORE_FIELDS, EXTRA_BOUNDS, FIELD_BOUNDS, INT_FIELDS,
+                     ParamLeaf, ParamSpace, bounds_for)
+from .spec import SPEC_VERSION, ProxySpec, SpecError, validate_spec_json
+from .stack import (HadoopStack, MPIStack, OpenMPStack, RunReport,
+                    SparkStack, Stack, get_stack, list_stacks,
+                    register_stack)
+
+__all__ = [
+    "CORE_FIELDS", "EXTRA_BOUNDS", "FIELD_BOUNDS", "INT_FIELDS",
+    "ParamLeaf", "ParamSpace", "bounds_for",
+    "SPEC_VERSION", "ProxySpec", "SpecError", "validate_spec_json",
+    "HadoopStack", "MPIStack", "OpenMPStack", "RunReport", "SparkStack",
+    "Stack", "get_stack", "list_stacks", "register_stack",
+]

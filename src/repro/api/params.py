@@ -1,0 +1,202 @@
+"""Pytree parameter space over a ProxyDAG's tunables.
+
+The paper's auto-tuning tool adjusts per-component parameters (Table 2:
+data size / chunk size / parallelism / weight, plus per-component input
+parameters such as the centroid-set size).  The seed plumbed these through
+stringly-typed ``(edge_idx, field)`` handles; this module flattens every
+tunable into a *named pytree* with per-leaf bounds so tuners operate on a
+plain vector — which is also the shape a gradient-free vectorized tuner
+(CMA-ES, random search over ``ParamSpace.sample``) wants.
+
+The space is purely structural: it is built once from a DAG's topology and
+can then read/write the parameter vector of any clone with the same
+topology.  No imports from ``repro.core`` — it only relies on the duck
+interface ``dag.edges[i].component / .params``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+#: canonical Table-2 tunables present on every component
+CORE_FIELDS = ("data_size", "chunk_size", "parallelism", "weight")
+
+#: bounds for the canonical fields plus well-known extras
+FIELD_BOUNDS: Dict[str, Tuple[float, float]] = {
+    "data_size": (256.0, float(1 << 26)),
+    "chunk_size": (8.0, float(1 << 20)),
+    "parallelism": (1.0, 256.0),
+    "weight": (0.0, 128.0),
+    "fraction": (0.05, 1.0),
+    "stride": (1.0, 64.0),
+}
+
+#: fallback bounds for numeric ``extra`` entries (centers, vertices, bins, ...)
+EXTRA_BOUNDS: Tuple[float, float] = (1.0, float(1 << 22))
+
+#: fields that must stay integral after a tuner step
+INT_FIELDS = {"data_size", "chunk_size", "parallelism", "weight", "stride",
+              "centers", "vertices", "bins", "groups", "buckets", "hops",
+              "rounds", "levels", "k"}
+
+
+def bounds_for(field: str) -> Tuple[float, float]:
+    return FIELD_BOUNDS.get(field, EXTRA_BOUNDS)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamLeaf:
+    """One tunable: a named leaf of the parameter pytree."""
+
+    name: str          # e.g. "e2.quick_sort.weight"
+    edge_idx: int
+    field: str         # ComponentParams field or numeric extra key
+    lo: float
+    hi: float
+    integer: bool
+
+    @property
+    def is_extra(self) -> bool:
+        return self.field not in CORE_FIELDS
+
+
+def _is_numeric(v: Any) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+class ParamSpace:
+    """Named, bounded, flat view over every tunable of a ProxyDAG."""
+
+    def __init__(self, leaves: Sequence[ParamLeaf], dag_name: str = ""):
+        self.leaves: List[ParamLeaf] = list(leaves)
+        self.dag_name = dag_name
+        self._index = {l.name: i for i, l in enumerate(self.leaves)}
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_dag(cls, dag) -> "ParamSpace":
+        leaves: List[ParamLeaf] = []
+        for i, e in enumerate(dag.edges):
+            prefix = f"e{i}.{e.component}"
+            for f in CORE_FIELDS:
+                lo, hi = bounds_for(f)
+                leaves.append(ParamLeaf(f"{prefix}.{f}", i, f, lo, hi,
+                                        f in INT_FIELDS))
+            for k in sorted(e.params.extra):
+                if not _is_numeric(e.params.extra[k]):
+                    continue
+                lo, hi = bounds_for(k)
+                leaves.append(ParamLeaf(f"{prefix}.{k}", i, k, lo, hi,
+                                        k in INT_FIELDS))
+        return cls(leaves, dag_name=getattr(dag, "name", ""))
+
+    # -- introspection -------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.leaves)
+
+    @property
+    def names(self) -> List[str]:
+        return [l.name for l in self.leaves]
+
+    def index_of(self, name: str) -> int:
+        return self._index[name]
+
+    def handle(self, i: int) -> Tuple[int, str]:
+        """Legacy ``(edge_idx, field)`` handle for leaf ``i`` (deprecated API)."""
+        l = self.leaves[i]
+        return (l.edge_idx, l.field)
+
+    def lower(self) -> np.ndarray:
+        return np.array([l.lo for l in self.leaves], dtype=np.float64)
+
+    def upper(self) -> np.ndarray:
+        return np.array([l.hi for l in self.leaves], dtype=np.float64)
+
+    # -- read / write --------------------------------------------------------
+
+    def _read_leaf(self, dag, l: ParamLeaf) -> float:
+        p = dag.edges[l.edge_idx].params
+        return float(p.extra[l.field] if l.is_extra else getattr(p, l.field))
+
+    def values(self, dag) -> np.ndarray:
+        """Current parameter vector of ``dag`` in this space's leaf order."""
+        return np.array([self._read_leaf(dag, l) for l in self.leaves],
+                        dtype=np.float64)
+
+    def apply(self, dag, values: Sequence[float], clamp: bool = True) -> None:
+        """Write a parameter vector back into ``dag``.
+
+        Changed leaves are clamped to bounds (integral fields rounded);
+        leaves whose requested value equals the dag's current value are
+        left untouched, so writing back an unmodified vector is a no-op
+        even when existing parameters sit outside the nominal bounds —
+        a single-leaf probe must never silently rewrite its neighbours.
+
+        ``clamp=False`` writes raw values: required when *restoring* a
+        previously-read vector whose entries may lie outside the nominal
+        bounds (a tuner revert must reproduce the exact prior state).
+        """
+        if len(values) != len(self.leaves):
+            raise ValueError(f"expected {len(self.leaves)} values, "
+                             f"got {len(values)}")
+        for l, v in zip(self.leaves, values):
+            v = float(v)
+            if v == self._read_leaf(dag, l):
+                continue
+            if clamp:
+                v = float(min(max(v, l.lo), l.hi))
+                if l.integer:
+                    v = float(round(v))
+            p = dag.edges[l.edge_idx].params
+            if l.is_extra:
+                p.extra[l.field] = v
+            else:
+                setattr(p, l.field, v)
+
+    # -- pytree views --------------------------------------------------------
+
+    def tree(self, dag) -> Dict[str, Dict[str, float]]:
+        """Nested ``{edge: {field: value}}`` pytree of the current values."""
+        out: Dict[str, Dict[str, float]] = {}
+        for l in self.leaves:
+            out.setdefault(f"e{l.edge_idx}.{dag.edges[l.edge_idx].component}",
+                           {})[l.field] = self._read_leaf(dag, l)
+        return out
+
+    def bounds_tree(self) -> Dict[str, Dict[str, Tuple[float, float]]]:
+        """Matching pytree of ``(lo, hi)`` bounds per leaf."""
+        out: Dict[str, Dict[str, Tuple[float, float]]] = {}
+        for l in self.leaves:
+            out.setdefault(l.name.rsplit(".", 1)[0], {})[l.field] = (l.lo, l.hi)
+        return out
+
+    def apply_tree(self, dag, tree: Dict[str, Dict[str, float]]) -> None:
+        vec = self.values(dag)
+        for edge_key, fields in tree.items():
+            for field, v in fields.items():
+                vec[self._index[f"{edge_key}.{field}"]] = v
+        self.apply(dag, vec)
+
+    # -- vectorized-tuner support -------------------------------------------
+
+    def clamp(self, values: np.ndarray) -> np.ndarray:
+        v = np.minimum(np.maximum(np.asarray(values, np.float64),
+                                  self.lower()), self.upper())
+        ints = np.array([l.integer for l in self.leaves])
+        v[ints] = np.round(v[ints])
+        return v
+
+    def sample(self, n: int, seed: int = 0) -> np.ndarray:
+        """(n, len(self)) log-uniform candidate vectors within bounds —
+        the entry point for gradient-free vectorized tuners."""
+        rs = np.random.RandomState(seed)
+        lo, hi = self.lower(), self.upper()
+        llo = np.log(np.maximum(lo, 1e-3))
+        lhi = np.log(np.maximum(hi, 1e-3))
+        raw = np.exp(rs.uniform(llo, lhi, size=(n, len(self.leaves))))
+        return np.stack([self.clamp(r) for r in raw])

@@ -1,0 +1,211 @@
+"""Versioned, schema-validated proxy-benchmark specs.
+
+A ``ProxySpec`` is the declarative, serializable form of a dwarf-DAG proxy
+benchmark (paper §2.3): sources, weighted component edges, sink, plus the
+software stack and scale it targets.  It round-trips losslessly through
+JSON (``to_json`` / ``from_json``), replacing the seed's write-only
+``ProxyBenchmark.save``.
+
+Version history
+---------------
+* **v1** (implicit): the seed's bare ``ProxyDAG.to_json()`` dict —
+  ``{name, sources, edges, sink}`` with no ``spec_version`` field.
+  ``from_json`` still accepts it.
+* **v2** (current): adds ``spec_version``, ``description``, ``stack``
+  and ``scale`` so a spec states *where* and *at what size* it runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from typing import Any, Dict, List, Optional
+
+from ..core.dag import Edge, ProxyDAG
+from ..core.dwarfs.base import REGISTRY
+
+SPEC_VERSION = 2
+
+_EDGE_NUMERIC = ("data_size", "chunk_size", "parallelism", "weight")
+
+
+class SpecError(ValueError):
+    """A proxy spec failed schema validation."""
+
+
+def _fail(path: str, msg: str) -> None:
+    raise SpecError(f"proxy spec invalid at {path}: {msg}")
+
+
+def _check_edge(i: int, e: Any) -> None:
+    path = f"edges[{i}]"
+    if not isinstance(e, dict):
+        _fail(path, f"expected object, got {type(e).__name__}")
+    for key in ("component", "src", "dst"):
+        if key not in e:
+            _fail(path, f"missing required key {key!r}")
+    if not isinstance(e["component"], str):
+        _fail(f"{path}.component", "expected string")
+    if e["component"] not in REGISTRY:
+        _fail(f"{path}.component",
+              f"unknown dwarf component {e['component']!r}; "
+              f"known: {sorted(REGISTRY)}")
+    if (not isinstance(e["src"], (list, tuple)) or not e["src"]
+            or not all(isinstance(s, str) for s in e["src"])):
+        _fail(f"{path}.src", "expected non-empty list of node names")
+    if not isinstance(e["dst"], str):
+        _fail(f"{path}.dst", "expected string node name")
+    for key in _EDGE_NUMERIC:
+        v = e.get(key)
+        if v is not None and not isinstance(v, (int, float)):
+            _fail(f"{path}.{key}", f"expected number, got {type(v).__name__}")
+    extra = e.get("extra", {})
+    if not isinstance(extra, dict):
+        _fail(f"{path}.extra", "expected object")
+    for k, v in extra.items():
+        if not isinstance(k, str):
+            _fail(f"{path}.extra", f"non-string key {k!r}")
+        if not isinstance(v, (int, float, str, bool)):
+            _fail(f"{path}.extra[{k!r}]",
+                  f"expected JSON scalar, got {type(v).__name__}")
+
+
+def validate_spec_json(d: Any) -> None:
+    """Raise :class:`SpecError` with a precise path if ``d`` is malformed."""
+    if not isinstance(d, dict):
+        _fail("$", f"expected object, got {type(d).__name__}")
+    version = d.get("spec_version", 1)
+    if not isinstance(version, int):
+        _fail("spec_version", "expected integer")
+    if version > SPEC_VERSION:
+        _fail("spec_version",
+              f"spec_version {version} is newer than supported {SPEC_VERSION}")
+    if not isinstance(d.get("name"), str) or not d.get("name"):
+        _fail("name", "expected non-empty string")
+    sources = d.get("sources")
+    if not isinstance(sources, dict) or not sources:
+        _fail("sources", "expected non-empty object of node -> element count")
+    for k, v in sources.items():
+        if not isinstance(k, str):
+            _fail("sources", f"non-string node name {k!r}")
+        if not isinstance(v, (int, float)) or v <= 0:
+            _fail(f"sources[{k!r}]", "expected positive element count")
+    edges = d.get("edges")
+    if not isinstance(edges, list):
+        _fail("edges", "expected list")
+    for i, e in enumerate(edges):
+        _check_edge(i, e)
+    sink = d.get("sink")
+    if sink is not None and not isinstance(sink, str):
+        _fail("sink", "expected string or null")
+    if version >= 2:
+        stack = d.get("stack", "openmp")
+        if not isinstance(stack, str):
+            _fail("stack", "expected string stack name")
+        from .stack import _STACKS
+        if stack not in _STACKS:
+            # warn, not fail: the stack registry is extensible at runtime
+            warnings.warn(f"proxy spec names unregistered stack {stack!r} "
+                          f"(known: {sorted(_STACKS)})", UserWarning,
+                          stacklevel=3)
+        scale = d.get("scale")
+        if scale is not None and not isinstance(scale, (str, int)):
+            _fail("scale", "expected string, integer, or null")
+        if not isinstance(d.get("description", ""), str):
+            _fail("description", "expected string")
+
+
+@dataclasses.dataclass
+class ProxySpec:
+    """Declarative proxy benchmark: DAG + target stack + scale."""
+
+    name: str
+    sources: Dict[str, int]
+    edges: List[Dict[str, Any]]            # normalized edge dicts
+    sink: Optional[str] = None
+    stack: str = "openmp"
+    scale: Optional[Any] = None
+    description: str = ""
+    spec_version: int = SPEC_VERSION
+
+    # -- JSON ----------------------------------------------------------------
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "spec_version": SPEC_VERSION,
+            "name": self.name,
+            "description": self.description,
+            "stack": self.stack,
+            "scale": self.scale,
+            "sources": {k: int(v) for k, v in self.sources.items()},
+            "edges": [dict(e) for e in self.edges],
+            "sink": self.sink,
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "ProxySpec":
+        validate_spec_json(d)
+        # Edge.from_json/to_json are the single source of edge defaults and
+        # of the normalized (legal-value) edge-dict shape
+        edges = [Edge.from_json(e).to_json() for e in d["edges"]]
+        spec = cls(
+            name=d["name"],
+            sources={k: int(v) for k, v in d["sources"].items()},
+            edges=edges,
+            sink=d.get("sink"),
+            stack=d.get("stack", "openmp"),
+            scale=d.get("scale"),
+            description=d.get("description", ""),
+        )
+        # surface topology errors at load time, not first run
+        spec.to_dag().validate()
+        return spec
+
+    def dumps(self, indent: int = 2) -> str:
+        return json.dumps(self.to_json(), indent=indent)
+
+    @classmethod
+    def loads(cls, text: str) -> "ProxySpec":
+        return cls.from_json(json.loads(text))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.dumps())
+
+    @classmethod
+    def load(cls, path: str) -> "ProxySpec":
+        with open(path) as f:
+            return cls.loads(f.read())
+
+    # -- DAG interop ---------------------------------------------------------
+
+    def to_dag(self) -> ProxyDAG:
+        return ProxyDAG(
+            name=self.name,
+            sources={k: int(v) for k, v in self.sources.items()},
+            edges=[Edge.from_json(e) for e in self.edges],
+            sink=self.sink)
+
+    @classmethod
+    def from_dag(cls, dag: ProxyDAG, stack: str = "openmp",
+                 scale: Optional[Any] = None,
+                 description: str = "") -> "ProxySpec":
+        return cls(
+            name=dag.name,
+            sources=dict(dag.sources),
+            edges=[e.to_json() for e in dag.edges],
+            sink=dag.sink,
+            stack=stack, scale=scale, description=description)
+
+    # -- benchmark interop ---------------------------------------------------
+
+    def to_benchmark(self):
+        from ..core.proxy import ProxyBenchmark
+        return ProxyBenchmark(dag=self.to_dag(), description=self.description)
+
+    @classmethod
+    def from_benchmark(cls, proxy, stack: str = "openmp",
+                       scale: Optional[Any] = None) -> "ProxySpec":
+        return cls.from_dag(proxy.dag, stack=stack, scale=scale,
+                            description=proxy.description)

@@ -1,0 +1,426 @@
+"""Software-stack execution protocol (paper §2.2.2, unified API).
+
+The paper implements every dwarf component on OpenMP / MPI / Hadoop / Spark
+because "software stack has great influences on workload behaviors".  The
+seed exposed four ad-hoc functions with different signatures; this module
+redesigns that axis around one contract:
+
+    stack = get_stack("hadoop")
+    report = stack.run(executable, *args)     # -> RunReport
+
+where ``executable`` may be a raw jit-able function, a ``ProxyDAG``, a
+``ProxyBenchmark``, a ``ProxySpec``, or a ``Workload`` — the stack coerces
+it and reports result, wall time and host<->device traffic uniformly.
+``run_batch`` vmaps rng-driven executables over a batch of keys for
+high-throughput proxy serving.
+
+JAX-native execution models:
+
+  * ``openmp``  — single-process jit; XLA intra-op threading = OpenMP threads.
+  * ``mpi``     — explicit SPMD via shard_map over a device mesh with the
+                  collectives spelled out (the MPI execution model).
+  * ``spark``   — global-view jit with input sharding constraints;
+                  intermediates stay device-resident ("in-memory RDD").
+  * ``hadoop``  — staged execution: every intermediate DAG node is
+                  materialized through *host* memory ("HDFS spill"), which is
+                  the disk-I/O behaviour the paper measures for Hadoop jobs.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:  # jax>=0.4.30 experimental location; stubbed out if unavailable
+    from jax.experimental.shard_map import shard_map as _shard_map
+except ImportError:  # pragma: no cover - depends on container jax build
+    _shard_map = None
+
+from ..core.dag import ProxyDAG
+
+
+# ---------------------------------------------------------------------------
+# RunReport
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunReport:
+    """Uniform result of ``Stack.run`` across every software stack."""
+
+    stack: str                   # registry name of the executing stack
+    wall_s: float                # end-to-end wall time (incl. compile)
+    io_bytes: float              # host<->device traffic ("disk I/O" analog)
+    result: Any = None           # the executable's output pytree
+    batch: int = 1               # number of rng instances executed
+    result_bytes: float = 0.0    # size of the output pytree
+
+    @property
+    def throughput(self) -> float:
+        """Executions per second (batched proxy serving metric)."""
+        return self.batch / max(self.wall_s, 1e-12)
+
+    @property
+    def io_bandwidth(self) -> float:
+        """Host-traffic bandwidth in bytes/s (paper Fig. 7 analog)."""
+        return self.io_bytes / max(self.wall_s, 1e-12)
+
+    def to_json(self) -> Dict[str, float]:
+        return {"stack": self.stack, "wall_s": self.wall_s,
+                "io_bytes": self.io_bytes, "batch": self.batch,
+                "result_bytes": self.result_bytes,
+                "throughput": self.throughput}
+
+
+def _tree_bytes(out: Any) -> float:
+    # jax/np arrays expose .nbytes without a device-to-host transfer;
+    # only Python scalars need materializing
+    total = 0.0
+    for x in jax.tree_util.tree_leaves(out):
+        nbytes = getattr(x, "nbytes", None)
+        total += float(np.asarray(x).nbytes if nbytes is None else nbytes)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Executable coercion
+# ---------------------------------------------------------------------------
+
+
+def _extract_dag(executable: Any) -> Optional[ProxyDAG]:
+    if isinstance(executable, ProxyDAG):
+        return executable
+    dag = getattr(executable, "dag", None)          # ProxyBenchmark
+    if isinstance(dag, ProxyDAG):
+        return dag
+    if hasattr(executable, "to_dag"):               # ProxySpec
+        return executable.to_dag()
+    return None
+
+
+def _as_fn(executable: Any, args: Tuple) -> Tuple[Callable, Tuple]:
+    """Coerce (executable, args) -> (jit-able fn, concrete args)."""
+    if callable(executable) and not hasattr(executable, "make_inputs"):
+        return executable, args
+    if hasattr(executable, "make_inputs"):          # core.workloads.Workload
+        from ..core.workloads import workload_step_fn
+        scale = args[0] if args else "tiny"
+        return workload_step_fn(executable.name, scale)
+    raise TypeError(f"cannot execute object of type "
+                    f"{type(executable).__name__} on a Stack; expected a "
+                    f"callable, ProxyDAG, ProxyBenchmark, ProxySpec, or "
+                    f"Workload")
+
+
+def _default_rng(rng: Optional[jax.Array]) -> jax.Array:
+    return jax.random.PRNGKey(0) if rng is None else rng
+
+
+# ---------------------------------------------------------------------------
+# Stack protocol
+# ---------------------------------------------------------------------------
+
+
+class Stack(abc.ABC):
+    """One software-stack execution model.  Subclasses implement
+    ``_execute(fn, args) -> (result, io_bytes)``; everything else —
+    executable coercion, timing, batching, reporting — is shared."""
+
+    name: str = "abstract"
+
+    @abc.abstractmethod
+    def _execute(self, fn: Callable, args: Tuple) -> Tuple[Any, float]:
+        """Run ``fn(*args)`` under this execution model.
+        Returns ``(result, io_bytes)``."""
+
+    def _execute_dag(self, dag: ProxyDAG, fn: Callable, args: Tuple
+                     ) -> Tuple[Any, float]:
+        """DAG-aware execution hook; default = treat the built fn opaquely."""
+        return self._execute(fn, args)
+
+    # -- public API ----------------------------------------------------------
+
+    def run(self, executable: Any, *args,
+            rng: Optional[jax.Array] = None) -> RunReport:
+        """Execute anything on this stack and report uniformly."""
+        dag = _extract_dag(executable)
+        t0 = time.perf_counter()
+        if dag is not None:
+            if args:
+                raise TypeError(
+                    f"{type(executable).__name__} executables take no "
+                    f"positional args; pass the PRNG key as rng=...")
+            fargs = (_default_rng(rng),)
+            result, io_bytes = self._execute_dag(dag, dag.build(), fargs)
+        else:
+            fn, fargs = _as_fn(executable, args)
+            if rng is not None:
+                if hasattr(executable, "make_inputs"):
+                    raise TypeError("Workload executables generate their own "
+                                    "inputs; rng= only applies to DAG or "
+                                    "rng-driven fn executables")
+                fargs = (*fargs, rng)    # fn(*args, rng) convention
+            result, io_bytes = self._execute(fn, fargs)
+        wall = time.perf_counter() - t0
+        return RunReport(stack=self.name, wall_s=wall, io_bytes=io_bytes,
+                         result=result, batch=1,
+                         result_bytes=_tree_bytes(result))
+
+    def run_batch(self, executable: Any,
+                  rngs: jax.Array) -> RunReport:
+        """Vectorized execution of an rng-driven executable over a batch of
+        PRNG keys (high-throughput proxy serving)."""
+        dag = _extract_dag(executable)
+        if dag is not None:
+            fn = dag.build()
+        elif callable(executable):
+            fn = executable
+        else:
+            raise TypeError("run_batch needs an rng-driven executable "
+                            "(ProxyDAG/ProxyBenchmark/ProxySpec or fn(rng))")
+        batch = int(rngs.shape[0])
+        t0 = time.perf_counter()
+        result, io_bytes = self._execute_batch(fn, rngs)
+        wall = time.perf_counter() - t0
+        return RunReport(stack=self.name, wall_s=wall, io_bytes=io_bytes,
+                         result=result, batch=batch,
+                         result_bytes=_tree_bytes(result))
+
+    def _execute_batch(self, fn: Callable, rngs: jax.Array
+                       ) -> Tuple[Any, float]:
+        return self._execute(jax.vmap(fn), (rngs,))
+
+    def __repr__(self) -> str:
+        return f"<Stack:{self.name}>"
+
+
+# ---------------------------------------------------------------------------
+# Implementations
+# ---------------------------------------------------------------------------
+
+
+def _default_mesh(axis: str) -> Mesh:
+    return Mesh(np.array(jax.devices()), (axis,))
+
+
+class OpenMPStack(Stack):
+    """Single-process jit: XLA intra-op threads are the OpenMP threads."""
+
+    name = "openmp"
+
+    def _execute(self, fn, args):
+        out = jax.jit(fn)(*args)
+        jax.block_until_ready(out)
+        return out, 0.0
+
+
+class MPIStack(Stack):
+    """Explicit SPMD over a device mesh with collectives spelled out.
+
+    Single runs are replicated across ranks and combined with an
+    all-reduce mean (identical per-rank inputs keep results bit-stable
+    across any rank count); batched runs shard the rng batch over ranks.
+    """
+
+    name = "mpi"
+
+    def __init__(self, mesh: Optional[Mesh] = None, axis: str = "rank"):
+        self.axis = axis
+        self._mesh = mesh          # built lazily: importing repro.api must
+                                   # not initialize the JAX backend
+
+    @property
+    def mesh(self) -> Mesh:
+        if self._mesh is None:
+            self._mesh = _default_mesh(self.axis)
+        return self._mesh
+
+    def _pmean_floats(self, out):
+        return jax.tree_util.tree_map(
+            lambda x: (jax.lax.pmean(x, self.axis)
+                       if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+                       else x), out)
+
+    def _execute(self, fn, args):
+        if _shard_map is None:  # pragma: no cover - jax without shard_map
+            out = jax.jit(fn)(*args)
+            jax.block_until_ready(out)
+            return out, 0.0
+        spmd = _shard_map(lambda *a: self._pmean_floats(fn(*a)),
+                          mesh=self.mesh, in_specs=P(), out_specs=P(),
+                          check_rep=False)
+        out = jax.jit(spmd)(*args)
+        jax.block_until_ready(out)
+        return out, 0.0
+
+    def _execute_batch(self, fn, rngs):
+        n = self.mesh.devices.size
+        batch = int(rngs.shape[0])
+        if _shard_map is None or batch % n != 0:  # pragma: no cover
+            return self._execute(jax.vmap(fn), (rngs,))
+        spmd = _shard_map(jax.vmap(fn), mesh=self.mesh,
+                          in_specs=P(self.axis), out_specs=P(self.axis),
+                          check_rep=False)
+        out = jax.jit(spmd)(rngs)
+        jax.block_until_ready(out)
+        return out, 0.0
+
+
+class SparkStack(Stack):
+    """Global-view jit with input sharding constraints; intermediates stay
+    device-resident (the "in-memory RDD" model)."""
+
+    name = "spark"
+
+    def __init__(self, mesh: Optional[Mesh] = None, axis: str = "worker"):
+        self.axis = axis
+        self._mesh = mesh          # lazy for the same reason as MPIStack
+
+    @property
+    def mesh(self) -> Mesh:
+        if self._mesh is None:
+            self._mesh = _default_mesh(self.axis)
+        return self._mesh
+
+    def _spec_for(self, a: Any) -> P:
+        shape = getattr(a, "shape", ())
+        n = self.mesh.devices.size
+        if len(shape) >= 1 and shape[0] > 0 and shape[0] % n == 0:
+            return P(self.axis)
+        return P()
+
+    def _execute(self, fn, args):
+        with self.mesh:
+            placed = tuple(
+                jax.device_put(a, NamedSharding(self.mesh, self._spec_for(a)))
+                if hasattr(a, "shape") else a
+                for a in args)
+            out = jax.jit(fn)(*placed)
+            jax.block_until_ready(out)
+        return out, 0.0
+
+
+class HadoopStack(Stack):
+    """Staged map -> host-materialized intermediate ("HDFS spill") ->
+    reduce.  DAG executables run edge-by-edge with every intermediate node
+    round-tripped through host memory; ``io_bytes`` counts both directions
+    (the paper's disk-I/O bandwidth analog)."""
+
+    name = "hadoop"
+
+    def __init__(self, n_chunks: int = 8):
+        self.n_chunks = n_chunks
+
+    def _execute(self, fn, args):
+        # opaque fn: run, then spill the result through host memory
+        out = jax.jit(fn)(*args)
+        jax.block_until_ready(out)
+        hosts = jax.tree_util.tree_map(lambda x: np.asarray(x), out)
+        io_bytes = _tree_bytes(hosts) * 2.0          # write + read back
+        result = jax.tree_util.tree_map(jnp.asarray, hosts)
+        return result, io_bytes
+
+    def _execute_dag(self, dag, fn, fargs):
+        return self._run_stages(dag, fargs[0], vmap=False)
+
+    def run_batch(self, executable, rngs):
+        dag = _extract_dag(executable)
+        if dag is None:
+            # raw fn: base path (vmap + single spill via _execute)
+            return super().run_batch(executable, rngs)
+        t0 = time.perf_counter()
+        result, io_bytes = self._run_stages(dag, rngs, vmap=True)
+        wall = time.perf_counter() - t0
+        return RunReport(stack=self.name, wall_s=wall, io_bytes=io_bytes,
+                         result=result, batch=int(rngs.shape[0]),
+                         result_bytes=_tree_bytes(result))
+
+    def _run_stages(self, dag: ProxyDAG, rng: jax.Array, vmap: bool
+                    ) -> Tuple[Any, float]:
+        init, stages, finalize = dag.build_stages()
+        jinit = jax.jit(jax.vmap(init) if vmap else init)
+        sources = jinit(rng)
+        io_bytes = 0.0
+        nodes: Dict[str, np.ndarray] = {}
+        for k, v in sources.items():                 # "HDFS read" of inputs
+            host = np.asarray(v)
+            io_bytes += host.nbytes
+            nodes[k] = host
+        for srcs, dst, stage in stages:              # map tasks
+            xs = [jnp.asarray(nodes[s]) for s in srcs]
+            prev = jnp.asarray(nodes[dst]) if dst in nodes else None
+            sfn = jax.vmap(stage, in_axes=(0, 0, None if prev is None else 0)
+                           ) if vmap else stage
+            out = jax.jit(sfn)(rng, xs, prev)
+            host = np.asarray(out)                   # spill to "disk"
+            io_bytes += host.nbytes * 2.0            # write + read back
+            nodes[dst] = host
+        jfin = jax.jit(jax.vmap(finalize) if vmap else finalize)
+        result = jfin({k: jnp.asarray(v) for k, v in nodes.items()})
+        jax.block_until_ready(result)
+        return result, io_bytes
+
+    # -- seed-compatible chunked map/reduce ---------------------------------
+
+    def map_reduce(self, map_fn: Callable, reduce_fn: Callable,
+                   data: jax.Array, n_chunks: Optional[int] = None
+                   ) -> RunReport:
+        """Chunked map -> host-spilled shuffle -> reduce (the seed's
+        ``hadoop()`` execution shape, now reporting uniformly)."""
+        n_chunks = n_chunks or self.n_chunks
+        t0 = time.perf_counter()
+        n = data.shape[0] // n_chunks * n_chunks
+        chunks = np.asarray(data[:n]).reshape(n_chunks, -1, *data.shape[1:])
+        jmap = jax.jit(map_fn)
+        io_bytes = 0.0
+        intermediates: List[np.ndarray] = []
+        for c in chunks:                              # map tasks
+            out = jmap(jnp.asarray(c))
+            host = np.asarray(out)                    # spill to "disk"
+            io_bytes += host.nbytes * 2.0             # write + read back
+            intermediates.append(host)
+        shuffled = jnp.asarray(
+            np.concatenate([i.reshape(-1) for i in intermediates]))
+        result = jax.jit(reduce_fn)(shuffled)         # reduce task
+        jax.block_until_ready(result)
+        wall = time.perf_counter() - t0
+        return RunReport(stack=self.name, wall_s=wall, io_bytes=io_bytes,
+                         result=result, batch=1,
+                         result_bytes=_tree_bytes(result))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+_STACKS: Dict[str, Stack] = {}
+
+
+def register_stack(stack: Stack) -> Stack:
+    """Register a Stack instance under its ``name``."""
+    _STACKS[stack.name] = stack
+    return stack
+
+
+def get_stack(name: str) -> Stack:
+    if name not in _STACKS:
+        raise KeyError(f"unknown stack {name!r}; known: {sorted(_STACKS)}")
+    return _STACKS[name]
+
+
+def list_stacks() -> List[str]:
+    return sorted(_STACKS)
+
+
+register_stack(OpenMPStack())
+register_stack(MPIStack())
+register_stack(SparkStack())
+register_stack(HadoopStack())

@@ -3,13 +3,16 @@ adjusting stage (impact analysis / decision mechanism) → feedback stage.
 
 The paper "learns the impact of each parameter on all metrics and builds a
 decision tree" by changing one parameter at a time and re-executing.  We do
-the same with log-space elasticities: for each (edge, parameter) handle we
-probe a x2 change and record d(log metric)/d(log param) for every metric.
-The adjusting stage then picks, for the worst-deviating metric, the handle
-with the strongest corrective elasticity (penalizing collateral damage to
-already-satisfied metrics), computes the multiplicative step that the linear
-model predicts closes the gap, and the feedback stage re-measures.  Converged
-when every tracked metric deviates ≤ tol (paper default 15%).
+the same with log-space elasticities over the proxy's **pytree parameter
+space** (:class:`repro.api.ParamSpace`): every tunable — the Table-2 fields
+plus numeric per-component extras — is one named, bounded leaf of a flat
+vector.  For each leaf we probe a x2 change and record
+d(log metric)/d(log param) for every metric.  The adjusting stage then
+picks, for the worst-deviating metric, the leaf with the strongest
+corrective elasticity (penalizing collateral damage to already-satisfied
+metrics), computes the multiplicative step that the linear model predicts
+closes the gap, and the feedback stage re-measures.  Converged when every
+tracked metric deviates ≤ tol (paper default 15%).
 """
 
 from __future__ import annotations
@@ -18,7 +21,10 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .metrics import eq1_accuracy, vector_accuracy
+import numpy as np
+
+from ..api.params import ParamSpace
+from .metrics import vector_accuracy
 from .proxy import ProxyBenchmark
 
 # Structural (size-independent) metrics tuned without executing the proxy.
@@ -33,31 +39,13 @@ DEFAULT_METRICS = (
 DEFAULT_WEIGHTS = {"arithmetic_intensity": 3.0, "vpu_share": 1.5,
                    "mix_dot": 2.0}
 
-_BOUNDS = {
-    "data_size": (256.0, float(1 << 26)),
-    "chunk_size": (8.0, float(1 << 20)),
-    "parallelism": (1.0, 256.0),
-    "weight": (0.0, 128.0),
-    "fraction": (0.05, 1.0),
-    "stride": (1.0, 64.0),
-}
-_EXTRA_BOUNDS = (1.0, float(1 << 22))   # centers, vertices, bins, groups, ...
-
-_INT_FIELDS = {"data_size", "chunk_size", "parallelism", "weight", "stride",
-               "centers", "vertices", "bins", "groups", "buckets", "hops",
-               "rounds", "levels", "k"}
-
-
-def _bounds(field: str):
-    return _BOUNDS.get(field, _EXTRA_BOUNDS)
-
 
 @dataclasses.dataclass
 class TuneStep:
     iteration: int
     worst_metric: str
     deviation_before: float
-    handle: Tuple[int, str]
+    param: str                    # ParamSpace leaf name, e.g. "e1.quick_sort.weight"
     old_value: float
     new_value: float
     avg_accuracy_after: float
@@ -72,7 +60,7 @@ class TuneResult:
     initial_accuracy: Dict[str, float]
     final_accuracy: Dict[str, float]
     history: List[TuneStep]
-    sensitivity: Dict[Tuple[int, str], Dict[str, float]]
+    sensitivity: Dict[str, Dict[str, float]]   # leaf name -> metric -> elasticity
 
     def summary(self) -> str:
         rows = [f"autotune[{self.proxy.name}]: converged={self.converged} "
@@ -82,8 +70,8 @@ class TuneResult:
         for s in self.history:
             rows.append(
                 f"  it{s.iteration:02d} worst={s.worst_metric}"
-                f"(dev {s.deviation_before:+.2f}) adjust edge{s.handle[0]}."
-                f"{s.handle[1]} {s.old_value:g}->{s.new_value:g}"
+                f"(dev {s.deviation_before:+.2f}) adjust {s.param} "
+                f"{s.old_value:g}->{s.new_value:g}"
                 f" => avg_acc {s.avg_accuracy_after:.3f}")
         return "\n".join(rows)
 
@@ -130,23 +118,23 @@ class AutoTuner:
 
     # -- impact analysis (the "decision tree" learning pass) ------------------
 
-    def _learn_sensitivity(self, proxy: ProxyBenchmark,
-                           base: Dict[str, float]
-                           ) -> Dict[Tuple[int, str], Dict[str, float]]:
-        table: Dict[Tuple[int, str], Dict[str, float]] = {}
-        for handle in proxy.dag.param_space():
-            i, field = handle
-            old = proxy.dag.get_param(i, field)
-            lo, hi = _bounds(field)
+    def _learn_sensitivity(self, proxy: ProxyBenchmark, space: ParamSpace,
+                           vec: np.ndarray, base: Dict[str, float]
+                           ) -> Dict[str, Dict[str, float]]:
+        table: Dict[str, Dict[str, float]] = {}
+        for li, leaf in enumerate(space.leaves):
+            old = float(vec[li])
             if old <= 0:   # pruned edge: probe re-enabling it
                 old = 1.0
-            probe = min(max(old * 2.0, lo), hi)
+            probe = min(max(old * 2.0, leaf.lo), leaf.hi)
             if probe == old:
-                probe = max(old / 2.0, lo)
+                probe = max(old / 2.0, leaf.lo)
             if probe == old:
                 continue
             trial = proxy.clone()
-            trial.dag.set_param(i, field, probe)
+            trial_vec = vec.copy()
+            trial_vec[li] = probe
+            space.apply(trial.dag, trial_vec)
             m = self._measure(trial)
             dlogp = math.log(probe / old)
             elast = {}
@@ -161,21 +149,21 @@ class AutoTuner:
                     elast[k] = 10.0   # parameter can *create* this metric
                 else:
                     elast[k] = 0.0
-            table[handle] = elast
+            table[leaf.name] = elast
         return table
 
     # -- adjusting stage -------------------------------------------------------
 
     def _pick_adjustment(self, sens, devs, satisfied, banned
-                         ) -> Optional[Tuple[str, Tuple[int, str], float]]:
-        """Pick (metric, handle, step-ratio): try metrics worst-first so a
+                         ) -> Optional[Tuple[str, str, float]]:
+        """Pick (metric, leaf name, step-ratio): try metrics worst-first so a
         banned/exhausted worst metric doesn't stall the whole loop."""
         for worst in sorted(devs, key=lambda k: -abs(devs[k])):
             if abs(devs[worst]) <= self.tol:
                 break
             is_mix = _is_share(worst)
-            best_handle, best_score, best_ratio = None, 0.0, 1.0
-            for handle, elast in sens.items():
+            best_leaf, best_score, best_ratio = None, 0.0, 1.0
+            for leaf_name, elast in sens.items():
                 e = elast.get(worst, 0.0)
                 if abs(e) < (0.02 if is_mix else 0.05):
                     continue
@@ -185,7 +173,7 @@ class AutoTuner:
                 else:
                     want = -math.log1p(max(min(dev, 8.0), -0.95)) / e
                 direction = 1 if want > 0 else -1
-                if (handle, worst, direction) in banned:
+                if (leaf_name, worst, direction) in banned:
                     continue
                 collateral = sum(abs(elast.get(k, 0.0)) for k in satisfied)
                 score = abs(e) - 0.25 * collateral
@@ -194,18 +182,20 @@ class AutoTuner:
                     big = abs(dev) > (0.3 if is_mix else 0.75)
                     cap = math.log(8.0) if big else math.log(2.0)
                     ratio = math.exp(max(min(want * 0.8, cap), -cap))
-                    best_handle, best_score, best_ratio = handle, score, ratio
-            if best_handle is not None:
-                return worst, best_handle, best_ratio
+                    best_leaf, best_score, best_ratio = leaf_name, score, ratio
+            if best_leaf is not None:
+                return worst, best_leaf, best_ratio
         return None
 
     # -- main loop -------------------------------------------------------------
 
     def tune(self, proxy: ProxyBenchmark) -> TuneResult:
         proxy = proxy.clone()
+        space = ParamSpace.from_dag(proxy.dag)
+        vec = space.values(proxy.dag)
         base = self._measure(proxy)
         init_acc = vector_accuracy(self.target, base, self.keys, self.weights)
-        sens = self._learn_sensitivity(proxy, base)
+        sens = self._learn_sensitivity(proxy, space, vec, base)
         history: List[TuneStep] = []
         best = (init_acc, proxy.clone())
         banned: set = set()
@@ -221,26 +211,31 @@ class AutoTuner:
             pick = self._pick_adjustment(sens, devs, satisfied, banned)
             if pick is None:
                 break
-            worst, (ei, field), ratio = pick
-            old = proxy.dag.get_param(ei, field)
-            lo, hi = _bounds(field)
-            new = min(max(max(old, lo if old <= 0 else old) * ratio, lo), hi)
-            if field in _INT_FIELDS:
+            worst, leaf_name, ratio = pick
+            li = space.index_of(leaf_name)
+            leaf = space.leaves[li]
+            old = float(vec[li])
+            new = min(max(max(old, leaf.lo if old <= 0 else old) * ratio,
+                          leaf.lo), leaf.hi)
+            if leaf.integer:
                 new = float(round(new))
             if new == old:
-                banned.add(((ei, field), worst, 1 if ratio > 1 else -1))
+                banned.add((leaf_name, worst, 1 if ratio > 1 else -1))
                 continue
             acc_before = vector_accuracy(self.target, cur, self.keys,
                                          self.weights)["avg"]
-            proxy.dag.set_param(ei, field, new)
+            vec[li] = new
+            space.apply(proxy.dag, vec)
             cur_new = self._measure(proxy)          # feedback stage
             acc = vector_accuracy(self.target, cur_new, self.keys, self.weights)
-            history.append(TuneStep(it, worst, devs[worst], (ei, field),
+            history.append(TuneStep(it, worst, devs[worst], leaf_name,
                                     old, new, acc["avg"]))
             if acc["avg"] < acc_before - 1e-6:
                 # regression: revert and prune this decision-tree branch
-                proxy.dag.set_param(ei, field, old)
-                banned.add(((ei, field), worst, 1 if ratio > 1 else -1))
+                # (clamp=False: the prior value may sit outside bounds)
+                vec[li] = old
+                space.apply(proxy.dag, vec, clamp=False)
+                banned.add((leaf_name, worst, 1 if ratio > 1 else -1))
                 continue
             cur = cur_new
             if acc["avg"] > best[0]["avg"]:

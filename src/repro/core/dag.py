@@ -5,11 +5,19 @@ dwarf component applied with its own tunable parameters.  ``weight`` is the
 component's contribution — realized as a repeat count, so doubling a weight
 doubles that component's share of the proxy's cost channels (which is exactly
 what the auto-tuner exploits).
+
+Two execution forms share one semantics:
+
+* :meth:`ProxyDAG.build` — one fused jit-able ``fn(rng) -> scalar``
+  (the openmp / mpi / spark execution shape).
+* :meth:`ProxyDAG.build_stages` — per-edge stages a driver may materialize
+  between (the hadoop execution shape: host-spilled intermediates).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -35,6 +43,52 @@ class Edge:
             "extra": dict(p.extra),
         }
 
+    @classmethod
+    def from_json(cls, d: Dict) -> "Edge":
+        return cls(d["component"], list(d["src"]), d["dst"],
+                   ComponentParams(int(d.get("data_size", 1 << 14)),
+                                   int(d.get("chunk_size", 256)),
+                                   int(d.get("parallelism", 1)),
+                                   int(d.get("weight", 1)),
+                                   dict(d.get("extra", {}))))
+
+
+# -- shared edge semantics (build and build_stages must agree exactly) -------
+
+
+def _init_sources(sources: Dict[str, int], rng: jax.Array
+                  ) -> Dict[str, jnp.ndarray]:
+    return {sname: jax.random.normal(jax.random.fold_in(rng, i),
+                                     (int(n),), jnp.float32)
+            for i, (sname, n) in enumerate(sorted(sources.items()))}
+
+
+def _gather_inputs(e: Edge, xs: List[jnp.ndarray]) -> jnp.ndarray:
+    return xs[0] if len(xs) == 1 else jnp.concatenate(
+        [fit_buffer(v, e.params.data_size) for v in xs])
+
+
+def _edge_out(e: Edge, ei: int, x: jnp.ndarray, rng: jax.Array
+              ) -> jnp.ndarray:
+    comp = get_component(e.component)
+    if e.params.weight == 0:                 # tuner pruned this edge
+        return fit_buffer(x, e.params.data_size)
+    out = x
+    for w in range(e.params.weight):         # weight = repeat count
+        r = jax.random.fold_in(rng, 10_000 + 131 * ei + w)
+        out = comp(fit_buffer(out, e.params.data_size), e.params, r)
+    return out
+
+
+def _accumulate(prev: Optional[jnp.ndarray], out: jnp.ndarray) -> jnp.ndarray:
+    return out if prev is None else prev + fit_buffer(out, prev.shape[0])
+
+
+def _terminals(edges: List[Edge]) -> List[str]:
+    produced = {e.dst for e in edges}
+    consumed = {s for e in edges for s in e.src}
+    return sorted(produced - consumed) or sorted(produced)
+
 
 @dataclasses.dataclass
 class ProxyDAG:
@@ -59,77 +113,73 @@ class ProxyDAG:
         if self.sink is not None and self.sink not in known:
             raise ValueError(f"sink {self.sink!r} not produced by any edge")
 
+    def _rounded_edges(self) -> List[Edge]:
+        return [dataclasses.replace(e, params=e.params.rounded())
+                for e in self.edges]
+
     # -- build ---------------------------------------------------------------
 
     def build(self) -> Callable[[jax.Array], jnp.ndarray]:
         """Returns a jit-able fn(rng) -> scalar executing the whole DAG."""
         self.validate()
-        edges = [dataclasses.replace(e, params=e.params.rounded())
-                 for e in self.edges]
+        edges = self._rounded_edges()
         sources = dict(self.sources)
         sink = self.sink
 
         def run(rng: jax.Array) -> jnp.ndarray:
-            nodes: Dict[str, jnp.ndarray] = {}
-            for i, (sname, n) in enumerate(sorted(sources.items())):
-                nodes[sname] = jax.random.normal(
-                    jax.random.fold_in(rng, i), (int(n),), jnp.float32)
+            nodes = _init_sources(sources, rng)
             for ei, e in enumerate(edges):
-                comp = get_component(e.component)
-                xs = [nodes[s] for s in e.src]
-                x = xs[0] if len(xs) == 1 else jnp.concatenate(
-                    [fit_buffer(v, e.params.data_size) for v in xs])
-                if e.params.weight == 0:             # tuner pruned this edge
-                    out = fit_buffer(x, e.params.data_size)
-                else:
-                    out = x
-                    for w in range(e.params.weight):  # weight = repeat count
-                        r = jax.random.fold_in(rng, 10_000 + 131 * ei + w)
-                        out = comp(fit_buffer(out, e.params.data_size),
-                                   e.params, r)
-                if e.dst in nodes:
-                    prev = nodes[e.dst]
-                    nodes[e.dst] = prev + fit_buffer(out, prev.shape[0])
-                else:
-                    nodes[e.dst] = out
+                x = _gather_inputs(e, [nodes[s] for s in e.src])
+                out = _edge_out(e, ei, x, rng)
+                nodes[e.dst] = _accumulate(nodes.get(e.dst), out)
             if sink is not None:
                 return jnp.sum(nodes[sink])
-            # default: reduce every terminal node
-            produced = {e.dst for e in edges}
-            consumed = {s for e in edges for s in e.src}
-            terminals = sorted(produced - consumed) or sorted(produced)
-            return sum(jnp.sum(nodes[t]) for t in terminals)
+            return sum(jnp.sum(nodes[t]) for t in _terminals(edges))
 
         return run
 
-    # -- tuner plumbing --------------------------------------------------------
+    def build_stages(self):
+        """Per-edge execution stages with semantics identical to ``build``.
 
-    def get_param(self, edge_idx: int, field: str) -> float:
-        p = self.edges[edge_idx].params
-        return float(p.extra[field] if field in p.extra else getattr(p, field))
+        Returns ``(init_fn, stages, finalize_fn)`` where
 
-    def set_param(self, edge_idx: int, field: str, value: float) -> None:
-        e = self.edges[edge_idx]
-        if field in e.params.extra:
-            e.params.extra[field] = value
-        else:
-            setattr(e.params, field, value)
+        * ``init_fn(rng) -> {source: array}`` generates the input data sets,
+        * ``stages`` is a list of ``(src_names, dst, stage_fn)`` in edge
+          order with ``stage_fn(rng, xs, prev) -> new dst value``
+          (``prev`` is the dst node's prior value for accumulation, or
+          ``None``), and
+        * ``finalize_fn(nodes) -> scalar`` performs the sink reduction.
 
-    def param_space(self) -> List[tuple]:
-        """(edge_idx, field) handles the auto-tuner may adjust (Table 2).
-
-        Numeric ``extra`` entries (centers, vertices, bins, ...) are exposed
-        too — they are per-component input-data-size parameters in the
-        paper's sense (e.g. the size of the centroid set).
+        A driver may materialize every intermediate between stages — the
+        Hadoop execution model.  The computed result matches ``build`` up
+        to float32 re-association from per-stage compilation (XLA fuses
+        differently when each edge is jitted alone).
         """
-        out = []
-        for i, e in enumerate(self.edges):
-            for f in ("data_size", "chunk_size", "parallelism", "weight"):
-                out.append((i, f))
-            for k, v in e.params.extra.items():
-                if isinstance(v, (int, float)) and not isinstance(v, bool):
-                    out.append((i, k))
-        return out
+        self.validate()
+        edges = self._rounded_edges()
+        sources = dict(self.sources)
+        sink = self.sink
+
+        def init_fn(rng: jax.Array) -> Dict[str, jnp.ndarray]:
+            return _init_sources(sources, rng)
+
+        def make_stage(e: Edge, ei: int):
+            def stage(rng, xs, prev):
+                out = _edge_out(e, ei, _gather_inputs(e, list(xs)), rng)
+                return _accumulate(prev, out)
+            return stage
+
+        stages = [(list(e.src), e.dst, make_stage(e, ei))
+                  for ei, e in enumerate(edges)]
+
+        def finalize_fn(nodes: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+            if sink is not None:
+                return jnp.sum(nodes[sink])
+            return sum(jnp.sum(nodes[t]) for t in _terminals(edges))
+
+        return init_fn, stages, finalize_fn
+
+    # -- serialization -------------------------------------------------------
 
     def to_json(self) -> Dict:
         return {
@@ -138,3 +188,39 @@ class ProxyDAG:
             "edges": [e.to_json() for e in self.edges],
             "sink": self.sink,
         }
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "ProxyDAG":
+        return cls(name=d["name"],
+                   sources={k: int(v) for k, v in d["sources"].items()},
+                   edges=[Edge.from_json(e) for e in d["edges"]],
+                   sink=d.get("sink"))
+
+    # -- deprecated tuner plumbing ------------------------------------------
+    # The auto-tuner now operates on repro.api.params.ParamSpace (a named
+    # pytree with per-leaf bounds); these string handles remain as thin
+    # shims for old callers.
+
+    def get_param(self, edge_idx: int, field: str) -> float:
+        warnings.warn("ProxyDAG.get_param is deprecated; use "
+                      "repro.api.ParamSpace", DeprecationWarning, stacklevel=2)
+        p = self.edges[edge_idx].params
+        return float(p.extra[field] if field in p.extra else getattr(p, field))
+
+    def set_param(self, edge_idx: int, field: str, value: float) -> None:
+        warnings.warn("ProxyDAG.set_param is deprecated; use "
+                      "repro.api.ParamSpace", DeprecationWarning, stacklevel=2)
+        e = self.edges[edge_idx]
+        if field in e.params.extra:
+            e.params.extra[field] = value
+        else:
+            setattr(e.params, field, value)
+
+    def param_space(self) -> List[tuple]:
+        """Deprecated: legacy ``(edge_idx, field)`` handles.  Use
+        :class:`repro.api.ParamSpace` for the named, bounded pytree view."""
+        warnings.warn("ProxyDAG.param_space is deprecated; use "
+                      "repro.api.ParamSpace", DeprecationWarning, stacklevel=2)
+        from ..api.params import ParamSpace
+        space = ParamSpace.from_dag(self)
+        return [space.handle(i) for i in range(len(space))]

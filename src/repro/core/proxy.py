@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
-import json
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -29,9 +29,26 @@ class ProxyBenchmark:
         return characterize(fn, (rng,), name=self.name, execute=execute,
                             exec_iters=exec_iters, host_bytes=host_bytes)
 
-    def save(self, path: str) -> None:
-        with open(path, "w") as f:
-            json.dump(self.dag.to_json(), f, indent=2)
+    # -- serialization (versioned ProxySpec round-trip) ----------------------
+
+    def to_spec(self, stack: str = "openmp", scale=None):
+        from ..api.spec import ProxySpec
+        return ProxySpec.from_benchmark(self, stack=stack, scale=scale)
+
+    @classmethod
+    def from_spec(cls, spec) -> "ProxyBenchmark":
+        return cls(dag=spec.to_dag(), description=spec.description)
+
+    def save(self, path: str, stack: str = "openmp", scale=None) -> None:
+        """Write a versioned spec (see :mod:`repro.api.spec`)."""
+        self.to_spec(stack=stack, scale=scale).save(path)
+
+    @classmethod
+    def load(cls, path: str) -> "ProxyBenchmark":
+        """Reconstruct a saved proxy (current spec_version or the seed's
+        legacy bare-DAG JSON) — profiles identically to the original."""
+        from ..api.spec import ProxySpec
+        return cls.from_spec(ProxySpec.load(path))
 
     def clone(self) -> "ProxyBenchmark":
         dag = ProxyDAG(
@@ -57,10 +74,13 @@ def proxy_from_dwarf_weights(name: str,
 
     ``weights`` come from :func:`repro.core.profiler.decompose_to_dwarfs` or
     from a hand analysis (e.g. paper's TeraSort = 70% sort / 10% sampling /
-    20% graph).
+    20% graph).  Dwarfs with no registered components cannot be realized;
+    they are dropped with a warning and recorded in the returned proxy's
+    ``description``.
     """
     total = sum(weights.values()) or 1.0
     edges: List[Edge] = []
+    dropped: List[str] = []
     prev = "src"
     idx = 0
     for dwarf, w in sorted(weights.items(), key=lambda kv: -kv[1]):
@@ -70,6 +90,7 @@ def proxy_from_dwarf_weights(name: str,
         comps = ([c.name for c in components_of_dwarf(dwarf)]
                  if not names else names)
         if not comps:
+            dropped.append(dwarf)
             continue
         # weight: ~8 repeats at 100% share, >=1 if present at all
         rep = max(1, round(8.0 * w / total))
@@ -81,5 +102,13 @@ def proxy_from_dwarf_weights(name: str,
                                    parallelism=parallelism, weight=rep)))
         prev = node
         idx += 1
+    description = f"auto-initialized from {weights}"
+    if dropped:
+        warnings.warn(
+            f"proxy_from_dwarf_weights({name!r}): no registered components "
+            f"for dwarf(s) {', '.join(sorted(dropped))}; omitted from the "
+            f"proxy DAG", UserWarning, stacklevel=2)
+        description += (" (dropped dwarfs with no registered components: "
+                        f"{', '.join(sorted(dropped))})")
     dag = ProxyDAG(name=name, sources={"src": base_size}, edges=edges, sink=prev)
-    return ProxyBenchmark(dag=dag, description=f"auto-initialized from {weights}")
+    return ProxyBenchmark(dag=dag, description=description)

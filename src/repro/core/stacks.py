@@ -1,44 +1,52 @@
-"""Software-stack substrates (paper §2.2.2).
+"""Deprecated software-stack entry points (paper §2.2.2).
 
-The paper implements every dwarf component on OpenMP / MPI / Hadoop / Spark
-because "software stack has great influences on workload behaviors".  The
-JAX-native analogues keep that axis of the methodology:
+The four ad-hoc functions this module used to define have been redesigned
+into the unified Stack protocol in :mod:`repro.api.stack`::
 
-  * ``openmp``  — single-process jit; XLA intra-op threading = OpenMP threads.
-  * ``mpi``     — explicit SPMD via ``jax.shard_map`` over a device mesh,
-                  collectives spelled out (the MPI execution model).
-  * ``hadoop``  — staged map -> materialize -> shuffle -> reduce with the
-                  intermediate round-tripped through *host* memory, which is
-                  the disk-I/O behaviour the paper measures for Hadoop jobs.
-  * ``spark``   — global-view pjit with sharding constraints; intermediates
-                  stay resident ("in-memory RDD").
+    from repro.api import get_stack
+    report = get_stack("hadoop").run(proxy)      # -> RunReport
 
-Each runner returns (result, io_bytes): io_bytes is the host<->device traffic
-(the paper's disk-I/O bandwidth analog; zero for all-device stacks).
+These shims keep the old ``(result, io_bytes)`` signatures working and
+delegate to the new implementations.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional, Sequence, Tuple
+import warnings
+from typing import Callable, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from ..api.stack import (HadoopStack, MPIStack, OpenMPStack,  # noqa: F401
+                         SparkStack, get_stack)
+
+
+def _warn(name: str) -> None:
+    warnings.warn(
+        f"repro.core.stacks.{name}() is deprecated; use "
+        f"repro.api.get_stack({name!r}).run(...)",
+        DeprecationWarning, stacklevel=3)
 
 
 def openmp(fn: Callable, *args) -> Tuple[jax.Array, float]:
-    out = jax.jit(fn)(*args)
-    jax.block_until_ready(out)
-    return out, 0.0
+    _warn("openmp")
+    r = get_stack("openmp").run(fn, *args)
+    return r.result, r.io_bytes
 
 
 def mpi(fn: Callable, mesh: jax.sharding.Mesh, axis: str, *args,
         out_specs=P()) -> Tuple[jax.Array, float]:
-    """SPMD execution: fn sees per-shard arrays + lax collectives over axis."""
-    sharded = jax.shard_map(fn, mesh=mesh,
-                            in_specs=P(axis), out_specs=out_specs)
+    """SPMD execution with the original semantics: per-shard inputs over
+    ``axis`` and caller-controlled ``out_specs``.  (``MPIStack.run`` instead
+    replicates inputs and all-reduces outputs — a different contract.)"""
+    _warn("mpi")
+    from ..api.stack import _shard_map
+    if _shard_map is None:  # pragma: no cover - jax without shard_map
+        raise NotImplementedError("legacy mpi() needs jax shard_map; use "
+                                  "repro.api.MPIStack instead")
+    sharded = _shard_map(fn, mesh=mesh, in_specs=P(axis),
+                         out_specs=out_specs, check_rep=False)
     out = jax.jit(sharded)(*args)
     jax.block_until_ready(out)
     return out, 0.0
@@ -46,34 +54,13 @@ def mpi(fn: Callable, mesh: jax.sharding.Mesh, axis: str, *args,
 
 def spark(fn: Callable, mesh: jax.sharding.Mesh, axis: str, *args
           ) -> Tuple[jax.Array, float]:
-    """Global-view execution with input sharding constraints (pjit)."""
-    shardings = tuple(NamedSharding(mesh, P(axis)) for _ in args)
-    with mesh:
-        placed = tuple(jax.device_put(a, s) for a, s in zip(args, shardings))
-        out = jax.jit(fn)(*placed)
-        jax.block_until_ready(out)
-    return out, 0.0
+    _warn("spark")
+    r = SparkStack(mesh=mesh, axis=axis).run(fn, *args)
+    return r.result, r.io_bytes
 
 
 def hadoop(map_fn: Callable, reduce_fn: Callable, data: jax.Array,
            n_chunks: int = 8) -> Tuple[jax.Array, float]:
-    """Map -> host-materialized intermediate ("HDFS spill") -> reduce.
-
-    Returns (result, io_bytes): every map output is copied to host and back,
-    emulating the intermediate-data disk round trip of the Hadoop execution
-    model; io_bytes counts both directions.
-    """
-    n = data.shape[0] // n_chunks * n_chunks
-    chunks = np.asarray(data[:n]).reshape(n_chunks, -1, *data.shape[1:])
-    jmap = jax.jit(map_fn)
-    io_bytes = 0.0
-    intermediates = []
-    for c in chunks:                      # map tasks
-        out = jmap(jnp.asarray(c))
-        host = np.asarray(out)            # spill to "disk"
-        io_bytes += host.nbytes * 2.0     # write + read back
-        intermediates.append(host)
-    shuffled = jnp.asarray(np.concatenate([i.reshape(-1) for i in intermediates]))
-    result = jax.jit(reduce_fn)(shuffled)  # reduce task
-    jax.block_until_ready(result)
-    return result, io_bytes
+    _warn("hadoop")
+    r = HadoopStack(n_chunks=n_chunks).map_reduce(map_fn, reduce_fn, data)
+    return r.result, r.io_bytes

@@ -3,22 +3,23 @@ plus their dwarf-DAG proxy benchmarks.
 
 Each original follows the Hadoop job structure the paper profiles (input
 partition → per-chunk map → intermediate materialization → shuffle/reduce);
-the proxies are DAG-like combinations of the Table-3 dwarf components with
-initial weights from the paper (e.g. TeraSort = 70% sort, 10% sampling,
-20% graph).
+the proxies are *declarative specs* (``PROXY_SPECS``, see
+:mod:`repro.api.spec`) — DAG-like combinations of the Table-3 dwarf
+components with initial weights from the paper (e.g. TeraSort = 70% sort,
+10% sampling, 20% graph) — loaded through the versioned ProxySpec
+round-trip rather than constructed inline.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..api.spec import SPEC_VERSION, ProxySpec
 from ..data import generators as gen
-from .dag import Edge, ProxyDAG
-from .dwarfs import ComponentParams
 from .proxy import ProxyBenchmark
 
 # ---------------------------------------------------------------------------
@@ -47,7 +48,20 @@ class Workload:
     make_inputs: Callable[[jax.Array, str], Tuple]
     step: Callable                         # jit-able job over the inputs
     table3_weights: Dict[str, float]       # paper's dwarf decomposition
-    make_proxy: Callable[[], ProxyBenchmark]
+    proxy_spec: Dict[str, Any]             # declarative Table-3 proxy spec
+
+    def make_proxy(self) -> ProxyBenchmark:
+        """Load the Table-3 proxy through the ProxySpec round-trip."""
+        return ProxySpec.from_json(self.proxy_spec).to_benchmark()
+
+
+def _edge(component: str, src, dst: str, *, weight: int = 1,
+          data_size: int = 1 << 15, chunk_size: int = 256,
+          parallelism: int = 1, **extra) -> Dict[str, Any]:
+    """One declarative proxy-spec edge (plain JSON data)."""
+    return {"component": component, "src": list(src), "dst": dst,
+            "data_size": data_size, "chunk_size": chunk_size,
+            "parallelism": parallelism, "weight": weight, "extra": extra}
 
 
 # ---------------------------------------------------------------------------
@@ -79,27 +93,35 @@ def terasort_step(keys: jnp.ndarray, payload: jnp.ndarray):
     return sorted_keys, sorted_payload, counts
 
 
+TERASORT_PROXY_SPEC: Dict[str, Any] = {
+    "spec_version": SPEC_VERSION,
+    "name": "proxy_terasort",
+    "description": "Proxy TeraSort (Table 3: 70% sort / 10% sampling / "
+                   "20% graph)",
+    "stack": "hadoop",            # I/O intensive: host-spilled intermediates
+    "scale": None,
+    "sources": {"src": 1 << 15},
+    "edges": [
+        # sampling: 10%
+        _edge("interval_sampling", ["src"], "sampled", chunk_size=2048,
+              stride=4),
+        _edge("random_sampling", ["src"], "sampled", chunk_size=2048,
+              fraction=0.25),
+        # sort: 70%
+        _edge("quick_sort", ["sampled"], "sorted", weight=4, chunk_size=2048),
+        _edge("merge_sort", ["sorted"], "merged", weight=2, chunk_size=2048),
+        # graph: 20%
+        _edge("graph_construction", ["merged"], "parts", chunk_size=2048,
+              vertices=512),
+        _edge("graph_traversal", ["parts"], "out", chunk_size=2048,
+              vertices=512, hops=2),
+    ],
+    "sink": "out",
+}
+
+
 def terasort_proxy() -> ProxyBenchmark:
-    base = 1 << 15
-    mk = lambda w, **kw: ComponentParams(data_size=base, chunk_size=2048,
-                                         parallelism=1, weight=w, extra=kw)
-    dag = ProxyDAG(
-        name="proxy_terasort",
-        sources={"src": base},
-        edges=[
-            # sampling: 10%
-            Edge("interval_sampling", ["src"], "sampled", mk(1, stride=4)),
-            Edge("random_sampling", ["src"], "sampled", mk(1, fraction=0.25)),
-            # sort: 70%
-            Edge("quick_sort", ["sampled"], "sorted", mk(4)),
-            Edge("merge_sort", ["sorted"], "merged", mk(2)),
-            # graph: 20%
-            Edge("graph_construction", ["merged"], "parts", mk(1, vertices=512)),
-            Edge("graph_traversal", ["parts"], "out", mk(1, vertices=512, hops=2)),
-        ],
-        sink="out")
-    return ProxyBenchmark(dag, "Proxy TeraSort (Table 3: 70% sort / 10% "
-                               "sampling / 20% graph)")
+    return ProxySpec.from_json(TERASORT_PROXY_SPEC).to_benchmark()
 
 
 # ---------------------------------------------------------------------------
@@ -161,23 +183,27 @@ def kmeans_sparse_step(idx: jnp.ndarray, vals: jnp.ndarray,
     return centers, inertia
 
 
+KMEANS_PROXY_SPEC: Dict[str, Any] = {
+    "spec_version": SPEC_VERSION,
+    "name": "proxy_kmeans",
+    "description": "Proxy Kmeans (Table 3: matrix / sort / basic statistic)",
+    "stack": "openmp",            # CPU intensive: single-process jit
+    "scale": None,
+    "sources": {"src": 1 << 15},
+    "edges": [
+        _edge("euclidean_distance", ["src"], "dist", weight=4, chunk_size=64,
+              centers=16),
+        _edge("cosine_distance", ["src"], "dist", chunk_size=64, centers=16),
+        _edge("quick_sort", ["dist"], "assign", chunk_size=64),
+        _edge("count_average", ["assign"], "stats", weight=2, chunk_size=64),
+        _edge("grouped_count", ["stats"], "out", chunk_size=64, groups=16),
+    ],
+    "sink": "out",
+}
+
+
 def kmeans_proxy() -> ProxyBenchmark:
-    base = 1 << 15
-    mk = lambda w, **kw: ComponentParams(data_size=base, chunk_size=64,
-                                         parallelism=1, weight=w, extra=kw)
-    dag = ProxyDAG(
-        name="proxy_kmeans",
-        sources={"src": base},
-        edges=[
-            Edge("euclidean_distance", ["src"], "dist", mk(4, centers=16)),
-            Edge("cosine_distance", ["src"], "dist", mk(1, centers=16)),
-            Edge("quick_sort", ["dist"], "assign", mk(1)),
-            Edge("count_average", ["assign"], "stats", mk(2)),
-            Edge("grouped_count", ["stats"], "out", mk(1, groups=16)),
-        ],
-        sink="out")
-    return ProxyBenchmark(dag, "Proxy Kmeans (Table 3: matrix / sort / "
-                               "basic statistic)")
+    return ProxySpec.from_json(KMEANS_PROXY_SPEC).to_benchmark()
 
 
 # ---------------------------------------------------------------------------
@@ -207,25 +233,29 @@ def pagerank_step(src: jnp.ndarray, dst: jnp.ndarray, n_vertices: int,
     return rank, top_vals, deltas
 
 
+PAGERANK_PROXY_SPEC: Dict[str, Any] = {
+    "spec_version": SPEC_VERSION,
+    "name": "proxy_pagerank",
+    "description": "Proxy PageRank (Table 3: matrix / sort / basic "
+                   "statistic)",
+    "stack": "spark",             # hybrid: global-view, memory-resident
+    "scale": None,
+    "sources": {"src": 1 << 15},
+    "edges": [
+        _edge("matrix_construction", ["src"], "mat"),
+        _edge("matrix_multiplication", ["mat"], "mm"),
+        _edge("spmv", ["src"], "mm", weight=3, vertices=4096),
+        _edge("graph_construction", ["mm"], "deg", vertices=4096),
+        _edge("quick_sort", ["deg"], "ranked"),
+        _edge("min_max", ["ranked"], "norm"),
+        _edge("grouped_count", ["norm"], "out", groups=256),
+    ],
+    "sink": "out",
+}
+
+
 def pagerank_proxy() -> ProxyBenchmark:
-    base = 1 << 15
-    mk = lambda w, **kw: ComponentParams(data_size=base, chunk_size=256,
-                                         parallelism=1, weight=w, extra=kw)
-    dag = ProxyDAG(
-        name="proxy_pagerank",
-        sources={"src": base},
-        edges=[
-            Edge("matrix_construction", ["src"], "mat", mk(1)),
-            Edge("matrix_multiplication", ["mat"], "mm", mk(1)),
-            Edge("spmv", ["src"], "mm", mk(3, vertices=4096)),
-            Edge("graph_construction", ["mm"], "deg", mk(1, vertices=4096)),
-            Edge("quick_sort", ["deg"], "ranked", mk(1)),
-            Edge("min_max", ["ranked"], "norm", mk(1)),
-            Edge("grouped_count", ["norm"], "out", mk(1, groups=256)),
-        ],
-        sink="out")
-    return ProxyBenchmark(dag, "Proxy PageRank (Table 3: matrix / sort / "
-                               "basic statistic)")
+    return ProxySpec.from_json(PAGERANK_PROXY_SPEC).to_benchmark()
 
 
 # ---------------------------------------------------------------------------
@@ -272,25 +302,29 @@ def sift_step(images: jnp.ndarray):
     return desc, hist, is_max.sum(), top_vals
 
 
+SIFT_PROXY_SPEC: Dict[str, Any] = {
+    "spec_version": SPEC_VERSION,
+    "name": "proxy_sift",
+    "description": "Proxy SIFT (Table 3: matrix / sort / sampling / "
+                   "transform / statistic)",
+    "stack": "mpi",               # CPU+memory intensive: explicit SPMD
+    "scale": None,
+    "sources": {"src": 1 << 15},
+    "edges": [
+        _edge("fft", ["src"], "freq", weight=3),
+        _edge("matrix_construction", ["freq"], "mat"),
+        _edge("matrix_multiplication", ["mat"], "mm", weight=2),
+        _edge("interval_sampling", ["mm"], "sampled", stride=8),
+        _edge("quick_sort", ["sampled"], "sorted"),
+        _edge("min_max", ["sorted"], "norm"),
+        _edge("histogram", ["norm"], "out", bins=8),
+    ],
+    "sink": "out",
+}
+
+
 def sift_proxy() -> ProxyBenchmark:
-    base = 1 << 15
-    mk = lambda w, **kw: ComponentParams(data_size=base, chunk_size=256,
-                                         parallelism=1, weight=w, extra=kw)
-    dag = ProxyDAG(
-        name="proxy_sift",
-        sources={"src": base},
-        edges=[
-            Edge("fft", ["src"], "freq", mk(3)),
-            Edge("matrix_construction", ["freq"], "mat", mk(1)),
-            Edge("matrix_multiplication", ["mat"], "mm", mk(2)),
-            Edge("interval_sampling", ["mm"], "sampled", mk(1, stride=8)),
-            Edge("quick_sort", ["sampled"], "sorted", mk(1)),
-            Edge("min_max", ["sorted"], "norm", mk(1)),
-            Edge("histogram", ["norm"], "out", mk(1, bins=8)),
-        ],
-        sink="out")
-    return ProxyBenchmark(dag, "Proxy SIFT (Table 3: matrix / sort / "
-                               "sampling / transform / statistic)")
+    return ProxySpec.from_json(SIFT_PROXY_SPEC).to_benchmark()
 
 
 # ---------------------------------------------------------------------------
@@ -302,30 +336,38 @@ def _kmeans_io(scale):  # default dense
     return _kmeans_inputs(jax.random.PRNGKey(0), scale)
 
 
+#: workload name -> declarative Table-3 proxy spec (the emit/load surface)
+PROXY_SPECS: Dict[str, Dict[str, Any]] = {
+    "terasort": TERASORT_PROXY_SPEC,
+    "kmeans": KMEANS_PROXY_SPEC,
+    "pagerank": PAGERANK_PROXY_SPEC,
+    "sift": SIFT_PROXY_SPEC,
+}
+
 WORKLOADS: Dict[str, Workload] = {
     "terasort": Workload(
         "terasort", "io-intensive", _terasort_inputs,
         terasort_step,
         {"sort": 0.7, "sampling": 0.1, "graph": 0.2},
-        terasort_proxy),
+        TERASORT_PROXY_SPEC),
     "kmeans": Workload(
         "kmeans", "cpu-intensive", lambda r, s: _kmeans_inputs(r, s),
         lambda x, c: kmeans_step(x, c, 3),
         {"matrix": 0.6, "sort": 0.2, "statistic": 0.2},
-        kmeans_proxy),
+        KMEANS_PROXY_SPEC),
     "pagerank": Workload(
         "pagerank", "hybrid", _pagerank_inputs,
         None,  # bound per-scale below (needs n_vertices)
         # Table 1 lists PageRank as Matrix+Graph+Sort; our original realizes
         # the sparse matrix product as gather/segment-sum (graph dwarf)
         {"graph": 0.45, "matrix": 0.25, "sort": 0.15, "statistic": 0.15},
-        pagerank_proxy),
+        PAGERANK_PROXY_SPEC),
     "sift": Workload(
         "sift", "cpu-memory-intensive", _sift_inputs,
         sift_step,
         {"matrix": 0.35, "transform": 0.25, "sampling": 0.1, "sort": 0.15,
          "statistic": 0.15},
-        sift_proxy),
+        SIFT_PROXY_SPEC),
 }
 
 

@@ -1,0 +1,129 @@
+"""Pytree parameter space: named leaves, bounds, vector/tree round-trip."""
+
+import numpy as np
+import pytest
+
+from repro.api import CORE_FIELDS, ParamSpace
+from repro.core.dag import Edge, ProxyDAG
+from repro.core.dwarfs import ComponentParams
+
+
+def _dag():
+    return ProxyDAG(
+        "x", {"src": 4096},
+        [Edge("euclidean_distance", ["src"], "a",
+              ComponentParams(data_size=4096, chunk_size=64, weight=2,
+                              extra={"centers": 8})),
+         Edge("quick_sort", ["a"], "out",
+              ComponentParams(data_size=4096, chunk_size=256, weight=1))],
+        "out")
+
+
+def test_leaves_cover_core_fields_and_numeric_extras():
+    space = ParamSpace.from_dag(_dag())
+    names = set(space.names)
+    for f in CORE_FIELDS:
+        assert f"e0.euclidean_distance.{f}" in names
+        assert f"e1.quick_sort.{f}" in names
+    assert "e0.euclidean_distance.centers" in names
+    assert len(space) == 2 * len(CORE_FIELDS) + 1
+
+
+def test_every_leaf_has_finite_bounds():
+    space = ParamSpace.from_dag(_dag())
+    lo, hi = space.lower(), space.upper()
+    assert (lo < hi).all() and np.isfinite(lo).all() and np.isfinite(hi).all()
+
+
+def test_values_apply_roundtrip():
+    dag = _dag()
+    space = ParamSpace.from_dag(dag)
+    vec = space.values(dag)
+    vec[space.index_of("e0.euclidean_distance.centers")] = 32
+    vec[space.index_of("e1.quick_sort.weight")] = 5
+    space.apply(dag, vec)
+    assert dag.edges[0].params.extra["centers"] == 32
+    assert dag.edges[1].params.weight == 5
+    assert np.allclose(space.values(dag), vec)
+
+
+def test_apply_clamps_to_bounds_and_rounds_ints():
+    dag = _dag()
+    space = ParamSpace.from_dag(dag)
+    vec = space.values(dag)
+    li = space.index_of("e1.quick_sort.weight")
+    vec[li] = 1e9                      # above the weight upper bound
+    space.apply(dag, vec)
+    assert dag.edges[1].params.weight == space.leaves[li].hi
+    vec[li] = 2.6                      # integral field
+    space.apply(dag, vec)
+    assert dag.edges[1].params.weight == 3
+
+
+def test_apply_is_noop_for_unchanged_leaves_even_out_of_bounds():
+    # an existing out-of-bounds param (schema doesn't enforce bounds) must
+    # survive an identity write-back: probing one leaf may not clamp others
+    dag = _dag()
+    dag.edges[0].params.extra["centers"] = float(1 << 23)   # above EXTRA hi
+    space = ParamSpace.from_dag(dag)
+    vec = space.values(dag)
+    vec[space.index_of("e1.quick_sort.weight")] = 3         # touch one leaf
+    space.apply(dag, vec)
+    assert dag.edges[0].params.extra["centers"] == float(1 << 23)
+    assert dag.edges[1].params.weight == 3
+
+
+def test_apply_clamp_false_restores_out_of_bounds_values():
+    # a tuner revert must reproduce the exact prior state, even when the
+    # original value sat outside the nominal bounds
+    dag = _dag()
+    dag.edges[0].params.extra["centers"] = float(1 << 23)
+    space = ParamSpace.from_dag(dag)
+    orig = space.values(dag)
+    step = orig.copy()
+    step[space.index_of("e0.euclidean_distance.centers")] = 16
+    space.apply(dag, step)
+    space.apply(dag, orig, clamp=False)           # revert
+    assert dag.edges[0].params.extra["centers"] == float(1 << 23)
+
+
+def test_tree_and_bounds_tree_views():
+    dag = _dag()
+    space = ParamSpace.from_dag(dag)
+    tree = space.tree(dag)
+    assert tree["e0.euclidean_distance"]["centers"] == 8
+    bounds = space.bounds_tree()
+    lo, hi = bounds["e1.quick_sort"]["weight"]
+    assert lo == 0.0 and hi > 1
+
+    tree["e1.quick_sort"]["weight"] = 7
+    space.apply_tree(dag, tree)
+    assert dag.edges[1].params.weight == 7
+
+
+def test_sample_stays_in_bounds():
+    space = ParamSpace.from_dag(_dag())
+    cand = space.sample(16, seed=3)
+    assert cand.shape == (16, len(space))
+    assert (cand >= space.lower() - 1e-9).all()
+    assert (cand <= space.upper() + 1e-9).all()
+
+
+def test_legacy_param_space_shim_matches():
+    dag = _dag()
+    space = ParamSpace.from_dag(dag)
+    handles = dag.param_space()
+    assert handles == [space.handle(i) for i in range(len(space))]
+    fields = {f for _, f in handles}
+    assert {"data_size", "chunk_size", "parallelism", "weight",
+            "centers"} <= fields
+
+
+def test_legacy_get_set_param_warn():
+    dag = _dag()
+    with pytest.warns(DeprecationWarning):
+        v = dag.get_param(0, "centers")
+    assert v == 8
+    with pytest.warns(DeprecationWarning):
+        dag.set_param(0, "centers", 16)
+    assert dag.edges[0].params.extra["centers"] == 16

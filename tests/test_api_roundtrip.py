@@ -1,0 +1,161 @@
+"""Versioned ProxySpec round-trip + the issue's end-to-end demo:
+TeraSort proxy -> to_json -> from_json -> uniform Stack.run on openmp and
+hadoop -> autotune via the pytree parameter space."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import ParamSpace, ProxySpec, SpecError, get_stack
+from repro.core import ProxyBenchmark, proxy_from_dwarf_weights
+from repro.core.autotune import autotune
+from repro.core.workloads import PROXY_SPECS, WORKLOADS
+
+
+def _assert_same_metrics(m1, m2):
+    assert set(m1) == set(m2)
+    for k in m1:
+        assert m1[k] == pytest.approx(m2[k], rel=1e-9), k
+
+
+# ---------------------------------------------------------------------------
+# spec round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_spec_json_roundtrip_profiles_identically():
+    direct = WORKLOADS["terasort"].make_proxy()
+    spec = ProxySpec.from_benchmark(direct, stack="hadoop", scale="tiny")
+    wire = json.dumps(spec.to_json())              # full serialize...
+    back = ProxySpec.from_json(json.loads(wire))   # ...and back
+    assert back.stack == "hadoop" and back.scale == "tiny"
+    assert back.to_json() == spec.to_json()
+    _assert_same_metrics(
+        direct.profile(execute=False).metrics,
+        back.to_benchmark().profile(execute=False).metrics)
+
+
+def test_save_load_roundtrip_with_extra_params(tmp_path):
+    pb = WORKLOADS["kmeans"].make_proxy()
+    # touch an extra param so the round-trip must preserve it
+    pb.dag.edges[0].params.extra["centers"] = 24
+    path = str(tmp_path / "proxy_kmeans.json")
+    pb.save(path, stack="spark", scale="small")
+    loaded = ProxyBenchmark.load(path)
+    assert loaded.dag.edges[0].params.extra["centers"] == 24
+    assert loaded.description == pb.description
+    assert loaded.dag.to_json() == pb.dag.to_json()
+    _assert_same_metrics(pb.profile(execute=False).metrics,
+                         loaded.profile(execute=False).metrics)
+
+
+def test_legacy_v1_bare_dag_json_still_loads(tmp_path):
+    pb = WORKLOADS["sift"].make_proxy()
+    path = str(tmp_path / "legacy.json")
+    with open(path, "w") as f:
+        json.dump(pb.dag.to_json(), f)             # the seed's save() format
+    loaded = ProxyBenchmark.load(path)
+    assert loaded.dag.to_json() == pb.dag.to_json()
+
+
+@pytest.mark.parametrize("mutate, at", [
+    (lambda d: d.pop("sources"), "sources"),
+    (lambda d: d.update(spec_version=99), "spec_version"),
+    (lambda d: d["edges"][0].update(component="warp_drive"), "component"),
+    (lambda d: d["edges"][0].update(src=[]), "src"),
+    (lambda d: d["edges"][1].update(src=["not_a_node"]), "not yet defined"),
+    (lambda d: d.update(sources={"src": -3}), "positive"),
+])
+def test_spec_validation_rejects_malformed(mutate, at):
+    d = json.loads(json.dumps(PROXY_SPECS["terasort"]))
+    mutate(d)
+    with pytest.raises((SpecError, ValueError), match=at):
+        ProxySpec.from_json(d)
+
+
+def test_all_registered_workload_specs_are_valid():
+    for name, spec_json in PROXY_SPECS.items():
+        spec = ProxySpec.from_json(spec_json)
+        assert spec.name == f"proxy_{name}"
+        assert spec.stack in set(get_stack(s).name
+                                 for s in ("openmp", "mpi", "spark", "hadoop"))
+
+
+# ---------------------------------------------------------------------------
+# dropped-dwarf warning (proxy_from_dwarf_weights)
+# ---------------------------------------------------------------------------
+
+
+def test_proxy_from_dwarf_weights_warns_on_unknown_dwarf():
+    with pytest.warns(UserWarning, match="no registered components"):
+        pb = proxy_from_dwarf_weights(
+            "auto", {"sort": 0.5, "quantum_annealing": 0.5},
+            base_size=1 << 10)
+    assert "quantum_annealing" in pb.description
+    assert [e for e in pb.dag.edges]               # sort edge still present
+
+
+def test_proxy_from_dwarf_weights_clean_when_all_known():
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        pb = proxy_from_dwarf_weights("auto", {"sort": 0.7, "graph": 0.3},
+                                      base_size=1 << 10)
+    assert "dropped" not in pb.description
+
+
+# ---------------------------------------------------------------------------
+# the acceptance demo: spec -> stacks -> pytree autotune
+# ---------------------------------------------------------------------------
+
+
+def test_terasort_spec_stacks_autotune_demo():
+    # 1. build the TeraSort proxy and round-trip it through the spec
+    direct = WORKLOADS["terasort"].make_proxy()
+    wire = json.dumps(ProxySpec.from_benchmark(direct).to_json())
+    spec = ProxySpec.from_json(json.loads(wire))
+    proxy = spec.to_benchmark()
+
+    # shrink via the pytree parameter space so the demo stays fast
+    for pb in (direct, proxy):
+        space = ParamSpace.from_dag(pb.dag)
+        vec = space.values(pb.dag)
+        for li, leaf in enumerate(space.leaves):
+            if leaf.field == "data_size":
+                vec[li] = 4096
+        space.apply(pb.dag, vec)
+
+    # the round-trip is lossless: identical DAG json and metric vector
+    assert proxy.dag.to_json() == direct.dag.to_json()
+    base_direct = direct.profile(execute=False).metrics
+    base_rt = proxy.profile(execute=False).metrics
+    _assert_same_metrics(base_direct, base_rt)
+
+    # 2. run on at least openmp and hadoop through the uniform Stack API
+    results = {}
+    for stack_name in ("openmp", "hadoop"):
+        rep = get_stack(stack_name).run(proxy, rng=jax.random.PRNGKey(0))
+        results[stack_name] = float(np.asarray(rep.result))
+        assert np.isfinite(results[stack_name])
+    assert results["hadoop"] == pytest.approx(results["openmp"], rel=1e-3)
+
+    # 3. autotune via the pytree parameter space toward a recoverable
+    #    target (the same DAG re-weighted), paper-style <=15% deviation
+    target_pb = proxy.clone()
+    tspace = ParamSpace.from_dag(target_pb.dag)
+    tvec = tspace.values(target_pb.dag)
+    tvec[tspace.index_of("e2.quick_sort.weight")] = 8
+    tvec[tspace.index_of("e3.merge_sort.weight")] = 1
+    tspace.apply(target_pb.dag, tvec)
+    target = target_pb.profile(execute=False).metrics
+
+    res = autotune(proxy, target, tol=0.15, max_iter=8)
+    # 4. no worse than the seed path's guarantee on the same metrics:
+    #    tuned accuracy >= untuned, and a strong absolute match
+    assert res.final_accuracy["avg"] >= res.initial_accuracy["avg"]
+    assert res.final_accuracy["avg"] > 0.85
+    assert res.history or res.converged
+    # sensitivity table is keyed by pytree leaf names
+    assert all("." in k for k in res.sensitivity)

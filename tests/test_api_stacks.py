@@ -1,0 +1,168 @@
+"""Stack-protocol conformance: every registered stack runs the same tiny
+DAG through the uniform ``Stack.run()`` API, produces the same result
+(within tolerance), and reports well-formed ``RunReport`` fields."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (HadoopStack, ProxySpec, RunReport, get_stack,
+                       list_stacks)
+from repro.core.dag import Edge, ProxyDAG
+from repro.core.dwarfs import ComponentParams
+
+
+def _tiny_dag() -> ProxyDAG:
+    mk = lambda w, **kw: ComponentParams(data_size=2048, chunk_size=64,
+                                         parallelism=1, weight=w, extra=kw)
+    return ProxyDAG(
+        name="tiny",
+        sources={"src": 2048},
+        edges=[
+            Edge("quick_sort", ["src"], "a", mk(1)),
+            Edge("euclidean_distance", ["a"], "b", mk(2, centers=8)),
+            Edge("histogram", ["a", "b"], "out", mk(1, bins=8)),
+        ],
+        sink="out")
+
+
+@pytest.fixture(scope="module")
+def reference():
+    rep = get_stack("openmp").run(_tiny_dag(), rng=jax.random.PRNGKey(0))
+    return float(np.asarray(rep.result))
+
+
+def test_registry_has_all_four_stacks():
+    assert {"openmp", "mpi", "spark", "hadoop"} <= set(list_stacks())
+
+
+def test_get_stack_unknown_raises():
+    with pytest.raises(KeyError, match="unknown stack"):
+        get_stack("slurm")
+
+
+@pytest.mark.parametrize("name", sorted({"openmp", "mpi", "spark", "hadoop"}))
+def test_stack_conformance(name, reference):
+    rep = get_stack(name).run(_tiny_dag(), rng=jax.random.PRNGKey(0))
+    # well-formed report
+    assert isinstance(rep, RunReport)
+    assert rep.stack == name
+    assert rep.wall_s > 0.0
+    assert rep.io_bytes >= 0.0
+    assert rep.batch == 1
+    assert rep.result_bytes > 0.0
+    assert rep.throughput > 0.0
+    j = rep.to_json()
+    assert j["stack"] == name and "result" not in j
+    # identical result across stacks (tolerance: fusion differences only)
+    val = float(np.asarray(rep.result))
+    assert np.isfinite(val)
+    assert val == pytest.approx(reference, rel=1e-3)
+
+
+def test_hadoop_counts_host_spill_io(reference):
+    rep = get_stack("hadoop").run(_tiny_dag(), rng=jax.random.PRNGKey(0))
+    # every intermediate node materializes through host memory
+    assert rep.io_bytes > 0.0
+    assert float(np.asarray(rep.result)) == pytest.approx(reference, rel=1e-3)
+
+
+@pytest.mark.parametrize("name", ["openmp", "mpi", "hadoop"])
+def test_batched_execution_matches_single(name):
+    rngs = jax.random.split(jax.random.PRNGKey(0), 4)
+    rep = get_stack(name).run_batch(_tiny_dag(), rngs)
+    assert rep.batch == 4
+    vals = np.asarray(rep.result)
+    assert vals.shape == (4,)
+    single = get_stack(name).run(_tiny_dag(), rng=rngs[0])
+    assert vals[0] == pytest.approx(float(np.asarray(single.result)),
+                                    rel=1e-3)
+
+
+def test_raw_fn_runs_on_every_stack():
+    x = jnp.arange(512, dtype=jnp.float32)
+    ref = float(jnp.sum(x * x))
+    for name in ("openmp", "mpi", "spark", "hadoop"):
+        rep = get_stack(name).run(lambda v: jnp.sum(v * v), x)
+        assert float(np.asarray(rep.result)) == pytest.approx(ref, rel=1e-5)
+
+
+def test_spec_and_benchmark_executables_coerce():
+    spec = ProxySpec.from_dag(_tiny_dag())
+    rep_spec = get_stack("openmp").run(spec, rng=jax.random.PRNGKey(0))
+    rep_pb = get_stack("openmp").run(spec.to_benchmark(),
+                                     rng=jax.random.PRNGKey(0))
+    assert float(np.asarray(rep_spec.result)) == pytest.approx(
+        float(np.asarray(rep_pb.result)), rel=1e-6)
+
+
+def test_workload_runs_on_stack():
+    from repro.core.workloads import WORKLOADS
+    rep = get_stack("openmp").run(WORKLOADS["terasort"], "tiny")
+    assert all(np.isfinite(np.asarray(leaf)).all()
+               for leaf in jax.tree_util.tree_leaves(rep.result))
+
+
+def test_map_reduce_reports_io():
+    data = jnp.arange(4096, dtype=jnp.float32)
+    rep = HadoopStack(n_chunks=4).map_reduce(
+        lambda c: jnp.sort(c.reshape(-1)), lambda x: jnp.sort(x), data)
+    assert rep.io_bytes > 0
+    assert np.asarray(rep.result).shape == (4096,)
+
+
+def test_legacy_stack_functions_warn_and_delegate():
+    from repro.core import stacks
+    x = jnp.arange(64, dtype=jnp.float32)
+    with pytest.warns(DeprecationWarning):
+        out, io = stacks.openmp(lambda v: jnp.sum(v), x)
+    assert float(out) == pytest.approx(float(jnp.sum(x)))
+    assert io == 0.0
+    with pytest.warns(DeprecationWarning):
+        out, io = stacks.hadoop(lambda c: jnp.sort(c.reshape(-1)),
+                                lambda v: jnp.sum(v), x, n_chunks=4)
+    assert io > 0
+
+
+def test_run_threads_rng_kwarg_into_raw_fn():
+    fn = lambda rng: jnp.sum(jax.random.normal(rng, (64,)))
+    key = jax.random.PRNGKey(7)
+    rep = get_stack("openmp").run(fn, rng=key)
+    expect = float(jax.jit(fn)(key))
+    assert float(np.asarray(rep.result)) == pytest.approx(expect, rel=1e-6)
+
+
+def test_run_rejects_positional_args_for_dag_executables():
+    with pytest.raises(TypeError, match="rng="):
+        get_stack("openmp").run(_tiny_dag(), jax.random.PRNGKey(7))
+
+
+def test_mesh_stacks_do_not_touch_backend_until_used():
+    # importing/instantiating must not freeze the jax device list
+    from repro.api import MPIStack, SparkStack
+    assert MPIStack()._mesh is None
+    assert SparkStack()._mesh is None
+
+
+def test_spec_warns_on_unknown_stack_name():
+    from repro.core.workloads import PROXY_SPECS
+    import json as _json
+    d = _json.loads(_json.dumps(PROXY_SPECS["kmeans"]))
+    d["stack"] = "hdoop"
+    with pytest.warns(UserWarning, match="unregistered stack"):
+        ProxySpec.from_json(d)
+
+
+def test_legacy_mpi_keeps_spmd_sharding_semantics():
+    # legacy mpi() shards inputs over the axis: psum over per-shard sums
+    # must equal the global sum regardless of rank count
+    from jax.sharding import Mesh
+    from repro.core import stacks
+    mesh = Mesh(np.array(jax.devices()), ("rank",))
+    x = jnp.arange(64, dtype=jnp.float32)
+    with pytest.warns(DeprecationWarning):
+        out, io = stacks.mpi(
+            lambda v: jax.lax.psum(jnp.sum(v), "rank"), mesh, "rank", x)
+    assert float(out) == pytest.approx(float(jnp.sum(x)))
+    assert io == 0.0

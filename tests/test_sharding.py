@@ -17,9 +17,16 @@ from repro.distributed.sharding import (batch_spec_axis, cache_specs_tree,
 from repro.models.model import Model, cache_specs, input_specs
 
 
+def _abstract_mesh(sizes, names):
+    try:                       # jax >= 0.5 signature: (axis_sizes, axis_names)
+        return AbstractMesh(sizes, names)
+    except TypeError:          # jax 0.4.x signature: ((name, size), ...)
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 def _meshes():
-    yield AbstractMesh((16, 16), ("data", "model"))
-    yield AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    yield _abstract_mesh((16, 16), ("data", "model"))
+    yield _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _axis_size(mesh, axis):
@@ -65,7 +72,7 @@ def test_cache_specs_divisible(arch):
 
 
 def test_batch_spec_axis_prefers_full_dp():
-    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     assert batch_spec_axis(mesh, 256) == ("pod", "data")
     assert batch_spec_axis(mesh, 16) == "data"
     assert batch_spec_axis(mesh, 1) is None
