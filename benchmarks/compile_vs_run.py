@@ -1,0 +1,185 @@
+"""Compile-once/run-many engine benchmark: trace counts, first-call vs
+steady-state time, and autotune-sweep wall time on a reference Table-3
+proxy — against the pre-PR execution model (rebuild + re-jit per run,
+whole-program lower+compile per tuner measurement).
+
+Emits ``BENCH_engine.json`` at the repo root so future PRs have a perf
+trajectory to regress against; also prints the harness CSV rows.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from statistics import median
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import ProxySpec, cache_stats, get_stack
+from repro.core import engine
+from repro.core.autotune import AutoTuner
+from repro.core.dag import (_accumulate, _gather_inputs, _init_sources,
+                            _terminals)
+from repro.core.dwarfs import get_component
+from repro.core.dwarfs.base import fit_buffer
+from repro.core.workloads import PROXY_SPECS
+
+from .common import ROOT, csv_row
+
+BENCH_JSON = ROOT / "BENCH_engine.json"
+
+#: reference proxy (paper Table 3) and sweep shape
+REFERENCE = "terasort"
+N_STEADY = int(os.environ.get("REPRO_BENCH_STEADY_ITERS", "8"))
+SWEEP_WEIGHTS = (1, 2, 4, 8, 16, 32, 64)
+TUNE_ITERS = int(os.environ.get("REPRO_BENCH_TUNE_ITERS", "6"))
+
+
+def _reference_proxy():
+    return ProxySpec.from_json(PROXY_SPECS[REFERENCE]).to_benchmark()
+
+
+def _seed_build(dag):
+    """The seed engine's execution form, reproduced faithfully as the
+    pre-PR baseline: weight repeats Python-unrolled (graph size O(sum of
+    weights)), the whole fn rebuilt and re-jitted per parameter step."""
+    dag.validate()
+    edges = dag._rounded_edges()
+    sources, sink = dict(dag.sources), dag.sink
+
+    def run(rng):
+        nodes = _init_sources(sources, rng)
+        for ei, e in enumerate(edges):
+            x = _gather_inputs(e, [nodes[s] for s in e.src])
+            comp = get_component(e.component)
+            if e.params.weight == 0:
+                out = fit_buffer(x, e.params.data_size)
+            else:
+                out = x
+                for w in range(e.params.weight):      # unrolled repeats
+                    r = jax.random.fold_in(rng, 10_000 + 131 * ei + w)
+                    out = comp(fit_buffer(out, e.params.data_size),
+                               e.params, r)
+            nodes[e.dst] = _accumulate(nodes.get(e.dst), out)
+        if sink is not None:
+            return jnp.sum(nodes[sink])
+        return sum(jnp.sum(nodes[t]) for t in _terminals(edges))
+
+    return run
+
+
+def bench_engine_run_path() -> Dict[str, float]:
+    """First call (compile) vs steady state through the executable cache."""
+    stack = get_stack("openmp")
+    proxy = _reference_proxy()
+    rng = jax.random.PRNGKey(0)
+    t0 = cache_stats()["traces"]
+    first = stack.run(proxy, rng=rng).wall_s
+    steady = median(stack.run(proxy, rng=rng).wall_s
+                    for _ in range(N_STEADY))
+    return {
+        "first_call_s": first,
+        "steady_state_s": steady,
+        "compile_amortization_x": first / max(steady, 1e-9),
+        "traces": cache_stats()["traces"] - t0,   # must be 1 (cold only)
+    }
+
+
+def bench_weight_sweep() -> Dict[str, float]:
+    """Stepping an edge weight across the sweep: cached executable vs the
+    pre-PR model (fresh ``build()`` + ``jax.jit`` per step = retrace)."""
+    stack = get_stack("openmp")
+    rng = jax.random.PRNGKey(0)
+
+    proxy = _reference_proxy()
+    stack.run(proxy, rng=rng)                     # warm the cache
+    t0 = cache_stats()["traces"]
+    t = time.perf_counter()
+    for w in SWEEP_WEIGHTS:
+        proxy.dag.edges[2].params.weight = w      # quick_sort edge
+        stack.run(proxy, rng=rng)
+    engine_s = time.perf_counter() - t
+    engine_traces = cache_stats()["traces"] - t0
+
+    pre = _reference_proxy()
+    t = time.perf_counter()
+    for w in SWEEP_WEIGHTS:
+        pre.dag.edges[2].params.weight = w
+        out = jax.jit(_seed_build(pre.dag))(rng)  # the seed's per-step path
+        jax.block_until_ready(out)
+    pre_pr_s = time.perf_counter() - t
+
+    return {
+        "steps": len(SWEEP_WEIGHTS),
+        "engine_s": engine_s,
+        "engine_retraces": engine_traces,
+        "pre_pr_s": pre_pr_s,
+        "speedup_x": pre_pr_s / max(engine_s, 1e-9),
+    }
+
+
+def bench_autotune_sweep() -> Dict[str, float]:
+    """Whole autotune sweeps, engine measurement vs legacy per-step
+    whole-program profiling."""
+    target = engine.measure(_reference_proxy().dag)
+
+    def _tune(measurement: str) -> float:
+        tuner = AutoTuner(target, tol=0.05, max_iter=TUNE_ITERS,
+                          measurement=measurement)
+        proxy = _reference_proxy()
+        proxy.dag.edges[2].params.weight = 1      # detuned start
+        proxy.dag.edges[3].params.weight = 8
+        t = time.perf_counter()
+        tuner.tune(proxy)
+        return time.perf_counter() - t
+
+    engine_s = _tune("engine")
+    profile_s = _tune("profile")
+    return {
+        "max_iter": TUNE_ITERS,
+        "engine_s": engine_s,
+        "profile_s": profile_s,
+        "speedup_x": profile_s / max(engine_s, 1e-9),
+    }
+
+
+def bench_compile_vs_run() -> List[str]:
+    run_path = bench_engine_run_path()
+    sweep = bench_weight_sweep()
+    tune = bench_autotune_sweep()
+    payload = {
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "reference_proxy": REFERENCE,
+        "run_path": run_path,
+        "weight_sweep": sweep,
+        "autotune_sweep": tune,
+        "engine_stats": engine.stats(),
+        "stack_cache_stats": cache_stats(),
+    }
+    BENCH_JSON.write_text(json.dumps(payload, indent=1) + "\n")
+    return [
+        csv_row("engine/run_path", run_path["steady_state_s"] * 1e6,
+                f"first_s={run_path['first_call_s']:.3f};"
+                f"steady_s={run_path['steady_state_s']:.4f};"
+                f"amortization={run_path['compile_amortization_x']:.0f}x;"
+                f"traces={run_path['traces']:.0f}"),
+        csv_row("engine/weight_sweep", sweep["engine_s"] * 1e6,
+                f"engine_s={sweep['engine_s']:.3f};"
+                f"pre_pr_s={sweep['pre_pr_s']:.3f};"
+                f"speedup={sweep['speedup_x']:.1f}x;"
+                f"retraces={sweep['engine_retraces']:.0f}"),
+        csv_row("engine/autotune_sweep", tune["engine_s"] * 1e6,
+                f"engine_s={tune['engine_s']:.3f};"
+                f"profile_s={tune['profile_s']:.3f};"
+                f"speedup={tune['speedup_x']:.1f}x"),
+    ]
+
+
+if __name__ == "__main__":
+    for row in bench_compile_vs_run():
+        print(row)
+    print(f"wrote {BENCH_JSON}")

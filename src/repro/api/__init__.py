@@ -25,13 +25,14 @@ from .params import (CORE_FIELDS, EXTRA_BOUNDS, FIELD_BOUNDS, INT_FIELDS,
                      ParamLeaf, ParamSpace, bounds_for)
 from .spec import SPEC_VERSION, ProxySpec, SpecError, validate_spec_json
 from .stack import (HadoopStack, MPIStack, OpenMPStack, RunReport,
-                    SparkStack, Stack, get_stack, list_stacks,
-                    register_stack)
+                    SparkStack, Stack, cache_stats, get_stack, list_stacks,
+                    register_stack, reset_cache_stats)
 
 __all__ = [
     "CORE_FIELDS", "EXTRA_BOUNDS", "FIELD_BOUNDS", "INT_FIELDS",
     "ParamLeaf", "ParamSpace", "bounds_for",
     "SPEC_VERSION", "ProxySpec", "SpecError", "validate_spec_json",
     "HadoopStack", "MPIStack", "OpenMPStack", "RunReport", "SparkStack",
-    "Stack", "get_stack", "list_stacks", "register_stack",
+    "Stack", "cache_stats", "get_stack", "list_stacks", "register_stack",
+    "reset_cache_stats",
 ]

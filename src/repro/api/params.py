@@ -57,6 +57,10 @@ class ParamLeaf:
     lo: float
     hi: float
     integer: bool
+    #: True for retrace-free tunables (weight + shape-free extras): stepping
+    #: them re-runs the cached executable; static leaves change the
+    #: structure key and recompile
+    dynamic: bool = False
 
     @property
     def is_extra(self) -> bool:
@@ -82,16 +86,20 @@ class ParamSpace:
         leaves: List[ParamLeaf] = []
         for i, e in enumerate(dag.edges):
             prefix = f"e{i}.{e.component}"
+            # retrace-free fields per the duck interface (plain edge objects
+            # without the static/dynamic split expose only weight)
+            dyn = set(e.dynamic_fields()) if hasattr(e, "dynamic_fields") \
+                else {"weight"}
             for f in CORE_FIELDS:
                 lo, hi = bounds_for(f)
                 leaves.append(ParamLeaf(f"{prefix}.{f}", i, f, lo, hi,
-                                        f in INT_FIELDS))
+                                        f in INT_FIELDS, dynamic=f in dyn))
             for k in sorted(e.params.extra):
                 if not _is_numeric(e.params.extra[k]):
                     continue
                 lo, hi = bounds_for(k)
                 leaves.append(ParamLeaf(f"{prefix}.{k}", i, k, lo, hi,
-                                        k in INT_FIELDS))
+                                        k in INT_FIELDS, dynamic=k in dyn))
         return cls(leaves, dag_name=getattr(dag, "name", ""))
 
     # -- introspection -------------------------------------------------------
@@ -105,6 +113,13 @@ class ParamSpace:
 
     def index_of(self, name: str) -> int:
         return self._index[name]
+
+    def dynamic_names(self) -> List[str]:
+        """Leaves steppable without an XLA retrace (the run-many axis)."""
+        return [l.name for l in self.leaves if l.dynamic]
+
+    def is_dynamic(self, name: str) -> bool:
+        return self.leaves[self._index[name]].dynamic
 
     def handle(self, i: int) -> Tuple[int, str]:
         """Legacy ``(edge_idx, field)`` handle for leaf ``i`` (deprecated API)."""

@@ -47,6 +47,46 @@ from ..core.dag import ProxyDAG
 
 
 # ---------------------------------------------------------------------------
+# Compiled-executable cache (compile-once/run-many)
+# ---------------------------------------------------------------------------
+#
+# DAG executables are compiled from their *parametric* form
+# (``ProxyDAG.build_parametric``): weights and shape-free extras enter as
+# jitted arguments, so one executable serves every dynamic-param setting of
+# a structure.  Each stack keeps its own cache (its execution model is part
+# of the compiled program) keyed on ``ProxyDAG.structure_key()``; these
+# module-level counters expose hit/miss/trace activity for the no-retrace
+# tests and the engine benchmarks.
+
+CACHE_STATS = {"hits": 0, "misses": 0, "traces": 0}
+
+#: executables retained per stack (FIFO eviction; a long-lived tuning or
+#: serving process sweeping *structural* params must not accumulate
+#: compiled programs without bound)
+CACHE_CAP = 256
+
+
+def cache_stats() -> Dict[str, int]:
+    return dict(CACHE_STATS)
+
+
+def reset_cache_stats() -> None:
+    for k in CACHE_STATS:
+        CACHE_STATS[k] = 0
+
+
+def _evict_oldest(cache: Dict, cap: int = CACHE_CAP) -> None:
+    while len(cache) > cap:
+        cache.pop(next(iter(cache)))
+
+
+def _donate_argnums() -> Tuple[int, ...]:
+    # donate the dynamic-param buffers (rebuilt fresh per call); CPU has no
+    # donation support, so skip it there to avoid per-compile warnings
+    return () if jax.default_backend() == "cpu" else (1,)
+
+
+# ---------------------------------------------------------------------------
 # RunReport
 # ---------------------------------------------------------------------------
 
@@ -129,9 +169,16 @@ def _default_rng(rng: Optional[jax.Array]) -> jax.Array:
 
 
 class Stack(abc.ABC):
-    """One software-stack execution model.  Subclasses implement
-    ``_execute(fn, args) -> (result, io_bytes)``; everything else —
-    executable coercion, timing, batching, reporting — is shared."""
+    """One software-stack execution model.
+
+    Subclasses implement ``_execute(fn, args) -> (result, io_bytes)`` for
+    raw-fn/workload executables; coercion, timing, batching and reporting
+    are shared.  DAG executables take the compile-once fast path instead:
+    ``run``/``run_batch`` fetch a cached parametric executable via
+    ``_compiled_dag``, so a stack that needs its execution model applied to
+    DAG runs overrides ``_wrap_parametric`` (bake the model into the
+    compiled fn — see ``MPIStack``) and/or ``_dag_run``/``_dag_run_batch``
+    (placement and io accounting — see ``SparkStack``/``HadoopStack``)."""
 
     name: str = "abstract"
 
@@ -140,10 +187,46 @@ class Stack(abc.ABC):
         """Run ``fn(*args)`` under this execution model.
         Returns ``(result, io_bytes)``."""
 
-    def _execute_dag(self, dag: ProxyDAG, fn: Callable, args: Tuple
-                     ) -> Tuple[Any, float]:
-        """DAG-aware execution hook; default = treat the built fn opaquely."""
-        return self._execute(fn, args)
+    # -- compiled DAG executables -------------------------------------------
+
+    def _compiled_dag(self, dag: ProxyDAG, batch: bool) -> Callable:
+        """Cached jitted ``fn(rng, dyn)`` for this stack's execution model.
+        One compile per (stack, structure key, batch-ness); every
+        dynamic-param setting of the structure reuses it."""
+        cache = self.__dict__.setdefault("_dag_cache", {})
+        key = (batch, dag.structure_key())
+        fn = cache.get(key)
+        if fn is None:
+            CACHE_STATS["misses"] += 1
+            fn = self._wrap_parametric(dag.build_parametric(), batch)
+            cache[key] = fn
+            _evict_oldest(cache)
+        else:
+            CACHE_STATS["hits"] += 1
+        return fn
+
+    def _wrap_parametric(self, pfn: Callable, batch: bool) -> Callable:
+        """Bake this stack's execution model into a jitted parametric fn."""
+        if batch:
+            def f(rngs, dyn):
+                CACHE_STATS["traces"] += 1
+                return jax.vmap(lambda r: pfn(r, dyn))(rngs)
+        else:
+            def f(rng, dyn):
+                CACHE_STATS["traces"] += 1
+                return pfn(rng, dyn)
+        return jax.jit(f, donate_argnums=_donate_argnums())
+
+    def _dag_run(self, dag: ProxyDAG, rng: jax.Array) -> Tuple[Any, float]:
+        out = self._compiled_dag(dag, batch=False)(rng, dag.dynamic_params())
+        jax.block_until_ready(out)
+        return out, 0.0
+
+    def _dag_run_batch(self, dag: ProxyDAG, rngs: jax.Array
+                       ) -> Tuple[Any, float]:
+        out = self._compiled_dag(dag, batch=True)(rngs, dag.dynamic_params())
+        jax.block_until_ready(out)
+        return out, 0.0
 
     # -- public API ----------------------------------------------------------
 
@@ -157,8 +240,7 @@ class Stack(abc.ABC):
                 raise TypeError(
                     f"{type(executable).__name__} executables take no "
                     f"positional args; pass the PRNG key as rng=...")
-            fargs = (_default_rng(rng),)
-            result, io_bytes = self._execute_dag(dag, dag.build(), fargs)
+            result, io_bytes = self._dag_run(dag, _default_rng(rng))
         else:
             fn, fargs = _as_fn(executable, args)
             if rng is not None:
@@ -178,16 +260,15 @@ class Stack(abc.ABC):
         """Vectorized execution of an rng-driven executable over a batch of
         PRNG keys (high-throughput proxy serving)."""
         dag = _extract_dag(executable)
-        if dag is not None:
-            fn = dag.build()
-        elif callable(executable):
-            fn = executable
-        else:
+        if dag is None and not callable(executable):
             raise TypeError("run_batch needs an rng-driven executable "
                             "(ProxyDAG/ProxyBenchmark/ProxySpec or fn(rng))")
         batch = int(rngs.shape[0])
         t0 = time.perf_counter()
-        result, io_bytes = self._execute_batch(fn, rngs)
+        if dag is not None:
+            result, io_bytes = self._dag_run_batch(dag, rngs)
+        else:
+            result, io_bytes = self._execute_batch(executable, rngs)
         wall = time.perf_counter() - t0
         return RunReport(stack=self.name, wall_s=wall, io_bytes=io_bytes,
                          result=result, batch=batch,
@@ -272,6 +353,30 @@ class MPIStack(Stack):
         jax.block_until_ready(out)
         return out, 0.0
 
+    def _wrap_parametric(self, pfn, batch):
+        if _shard_map is None:  # pragma: no cover - jax without shard_map
+            return super()._wrap_parametric(pfn, batch)
+        n = self.mesh.devices.size
+        if batch:
+            def f(rngs, dyn):
+                CACHE_STATS["traces"] += 1
+                vm = lambda rs, d: jax.vmap(lambda r: pfn(r, d))(rs)
+                if rngs.shape[0] % n != 0:  # pragma: no cover
+                    return vm(rngs, dyn)
+                return _shard_map(vm, mesh=self.mesh,
+                                  in_specs=(P(self.axis), P()),
+                                  out_specs=P(self.axis),
+                                  check_rep=False)(rngs, dyn)
+        else:
+            def f(rng, dyn):
+                CACHE_STATS["traces"] += 1
+                spmd = _shard_map(
+                    lambda r, d: self._pmean_floats(pfn(r, d)),
+                    mesh=self.mesh, in_specs=(P(), P()), out_specs=P(),
+                    check_rep=False)
+                return spmd(rng, dyn)
+        return jax.jit(f, donate_argnums=_donate_argnums())
+
 
 class SparkStack(Stack):
     """Global-view jit with input sharding constraints; intermediates stay
@@ -306,6 +411,24 @@ class SparkStack(Stack):
             jax.block_until_ready(out)
         return out, 0.0
 
+    def _dag_run(self, dag, rng):
+        fn = self._compiled_dag(dag, batch=False)
+        with self.mesh:
+            rng = jax.device_put(rng, NamedSharding(self.mesh, P()))
+            out = fn(rng, dag.dynamic_params())
+            jax.block_until_ready(out)
+        return out, 0.0
+
+    def _dag_run_batch(self, dag, rngs):
+        fn = self._compiled_dag(dag, batch=True)
+        with self.mesh:
+            # shard the rng batch over the workers (the "RDD partitions")
+            rngs = jax.device_put(
+                rngs, NamedSharding(self.mesh, self._spec_for(rngs)))
+            out = fn(rngs, dag.dynamic_params())
+            jax.block_until_ready(out)
+        return out, 0.0
+
 
 class HadoopStack(Stack):
     """Staged map -> host-materialized intermediate ("HDFS spill") ->
@@ -327,25 +450,41 @@ class HadoopStack(Stack):
         result = jax.tree_util.tree_map(jnp.asarray, hosts)
         return result, io_bytes
 
-    def _execute_dag(self, dag, fn, fargs):
-        return self._run_stages(dag, fargs[0], vmap=False)
+    def _dag_run(self, dag, rng):
+        return self._run_stages(dag, rng, vmap=False)
 
-    def run_batch(self, executable, rngs):
-        dag = _extract_dag(executable)
-        if dag is None:
-            # raw fn: base path (vmap + single spill via _execute)
-            return super().run_batch(executable, rngs)
-        t0 = time.perf_counter()
-        result, io_bytes = self._run_stages(dag, rngs, vmap=True)
-        wall = time.perf_counter() - t0
-        return RunReport(stack=self.name, wall_s=wall, io_bytes=io_bytes,
-                         result=result, batch=int(rngs.shape[0]),
-                         result_bytes=_tree_bytes(result))
+    def _dag_run_batch(self, dag, rngs):
+        return self._run_stages(dag, rngs, vmap=True)
+
+    def _cached_stage(self, key: Tuple, make: Callable) -> Callable:
+        cache = self.__dict__.setdefault("_stage_cache", {})
+        fn = cache.get(key)
+        if fn is None:
+            CACHE_STATS["misses"] += 1
+
+            def counted(*args, _f=make()):
+                CACHE_STATS["traces"] += 1
+                return _f(*args)
+
+            fn = jax.jit(counted)
+            cache[key] = fn
+            _evict_oldest(cache)
+        else:
+            CACHE_STATS["hits"] += 1
+        return fn
 
     def _run_stages(self, dag: ProxyDAG, rng: jax.Array, vmap: bool
                     ) -> Tuple[Any, float]:
-        init, stages, finalize = dag.build_stages()
-        jinit = jax.jit(jax.vmap(init) if vmap else init)
+        """Edge-by-edge execution with host-spilled intermediates.  Each
+        stage's jitted form is cached under its structural key, so repeated
+        runs — and dynamic-param sweeps — reuse every per-stage compile."""
+        init, stages, finalize = dag.build_stages_parametric()
+        skey = dag.structure_key()
+        dynp = dag.dynamic_params()
+        src_key = tuple(sorted(dag.sources.items()))
+        jinit = self._cached_stage(
+            ("init", vmap, src_key),
+            lambda: jax.vmap(init) if vmap else init)
         sources = jinit(rng)
         io_bytes = 0.0
         nodes: Dict[str, np.ndarray] = {}
@@ -353,16 +492,21 @@ class HadoopStack(Stack):
             host = np.asarray(v)
             io_bytes += host.nbytes
             nodes[k] = host
-        for srcs, dst, stage in stages:              # map tasks
+        for si, (srcs, dst, stage, stage_key) in enumerate(stages):  # map tasks
             xs = [jnp.asarray(nodes[s]) for s in srcs]
             prev = jnp.asarray(nodes[dst]) if dst in nodes else None
-            sfn = jax.vmap(stage, in_axes=(0, 0, None if prev is None else 0)
-                           ) if vmap else stage
-            out = jax.jit(sfn)(rng, xs, prev)
+            sfn = self._cached_stage(
+                ("stage", vmap, prev is None, stage_key),
+                lambda s=stage, hp=prev is None: (
+                    jax.vmap(s, in_axes=(0, 0, None if hp else 0, None))
+                    if vmap else s))
+            out = sfn(rng, xs, prev, dynp[si])
             host = np.asarray(out)                   # spill to "disk"
             io_bytes += host.nbytes * 2.0            # write + read back
             nodes[dst] = host
-        jfin = jax.jit(jax.vmap(finalize) if vmap else finalize)
+        jfin = self._cached_stage(
+            ("finalize", vmap, skey),
+            lambda: jax.vmap(finalize) if vmap else finalize)
         result = jfin({k: jnp.asarray(v) for k, v in nodes.items()})
         jax.block_until_ready(result)
         return result, io_bytes

@@ -100,21 +100,38 @@ class AutoTuner:
                  metric_keys: Sequence[str] = DEFAULT_METRICS,
                  tol: float = 0.15, max_iter: int = 40,
                  execute: bool = False,
-                 weights: Optional[Dict[str, float]] = None):
+                 weights: Optional[Dict[str, float]] = None,
+                 measurement: str = "engine"):
         self.target = target_metrics
         self.keys = [k for k in metric_keys if abs(target_metrics.get(k, 0.0)) > 1e-12]
         self.tol = tol
         self.max_iter = max_iter
         self.execute = execute
         self.weights = dict(DEFAULT_WEIGHTS) if weights is None else weights
+        if measurement not in ("engine", "profile"):
+            raise ValueError(f"measurement must be 'engine' or 'profile', "
+                             f"got {measurement!r}")
+        self.measurement = measurement
         self.profiles_run = 0
 
     # -- measurement ---------------------------------------------------------
 
     def _measure(self, proxy: ProxyBenchmark) -> Dict[str, float]:
+        """One adjust/feedback measurement.
+
+        ``measurement="engine"`` (default) goes through the compile-once
+        :mod:`repro.core.engine`: stepping a dynamic param (weight, shape-
+        free extras) between measurements triggers zero retraces, so sweep
+        cost no longer scales with compile time.  ``"profile"`` is the
+        legacy whole-program lower+compile per measurement (kept as the
+        baseline the engine benchmarks compare against).
+        """
         self.profiles_run += 1
-        prof = proxy.profile(execute=self.execute, exec_iters=1)
-        return prof.metrics
+        if self.measurement == "profile":
+            prof = proxy.profile(execute=self.execute, exec_iters=1)
+            return prof.metrics
+        from .engine import measure
+        return measure(proxy.dag, execute=self.execute, exec_iters=1)
 
     # -- impact analysis (the "decision tree" learning pass) ------------------
 

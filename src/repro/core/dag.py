@@ -6,25 +6,41 @@ component's contribution — realized as a repeat count, so doubling a weight
 doubles that component's share of the proxy's cost channels (which is exactly
 what the auto-tuner exploits).
 
-Two execution forms share one semantics:
+Repeats execute as a ``jax.lax.fori_loop``, so graph size and compile time
+are O(edges) — independent of the DAG's total weight.  Every edge's tunables
+split into a **static structure** (component, the shape-affecting sizes —
+:meth:`Edge.structure_key`) and a **dynamic param vector** (weight plus
+shape-free extras — :meth:`ProxyDAG.dynamic_params`) that
+:meth:`ProxyDAG.build_parametric` accepts as a jitted argument: stepping a
+dynamic param re-executes the same compiled program, no retrace.
 
-* :meth:`ProxyDAG.build` — one fused jit-able ``fn(rng) -> scalar``
-  (the openmp / mpi / spark execution shape).
+Three execution forms share one edge semantics (``_edge_out``):
+
+* :meth:`ProxyDAG.build` — one fused jit-able ``fn(rng) -> scalar`` with the
+  current params baked in (the openmp / mpi / spark execution shape; fully
+  analyzable HLO with ``known_trip_count`` weights for the profiler).
+* :meth:`ProxyDAG.build_parametric` — ``fn(rng, dyn) -> scalar``, the
+  compile-once/run-many form the ``repro.api.stack`` executable cache and
+  the ``repro.core.engine`` cost model key on ``structure_key()``.
 * :meth:`ProxyDAG.build_stages` — per-edge stages a driver may materialize
-  between (the hadoop execution shape: host-spilled intermediates).
+  between (the hadoop execution shape: host-spilled intermediates);
+  :meth:`ProxyDAG.build_stages_parametric` is its compile-once form.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .dwarfs import ComponentParams, get_component
 from .dwarfs.base import fit_buffer
+
+#: dynamic fields passed as i32 (they become loop bounds); the rest are f32
+_INT_DYNAMIC = {"weight", "rounds", "mix_rounds", "hops", "levels"}
 
 
 @dataclasses.dataclass
@@ -52,6 +68,46 @@ class Edge:
                                    int(d.get("weight", 1)),
                                    dict(d.get("extra", {}))))
 
+    # -- static / dynamic split ---------------------------------------------
+
+    def dynamic_fields(self) -> Tuple[str, ...]:
+        """Tunables steppable without a retrace: ``weight`` + the
+        component's declared shape-free extras present on this edge."""
+        return get_component(self.component).dynamic_fields(
+            self.params.rounded())
+
+    def structure_key(self) -> Tuple:
+        """Hashable key of everything that affects this edge's compiled
+        shape/program: component, shape-affecting sizes, static extras,
+        the *names* (not values) of its dynamic params, and — for
+        components with a Pallas fast path — the *resolved* backend and
+        interpret mode, so a ``REPRO_BACKEND`` / ``REPRO_PALLAS_INTERPRET``
+        change never hits an executable compiled for the other setting."""
+        p = self.params.rounded()
+        comp = get_component(self.component)
+        dyn = set(self.dynamic_fields())
+        static_extra = tuple(sorted(
+            (k, v) for k, v in p.extra.items() if k not in dyn))
+        backend = None
+        if comp.pallas_capable:
+            from ..kernels.dispatch import default_interpret
+            backend = ("pallas", default_interpret()) \
+                if comp.uses_pallas(p) else "xla"
+        return (self.component, p.data_size, p.chunk_size, p.parallelism,
+                static_extra, tuple(sorted(dyn - {"weight"})), backend)
+
+    def dynamic_values(self) -> Dict[str, jnp.ndarray]:
+        """Current dynamic param values as jit-argument scalars."""
+        p = self.params.rounded()
+        out: Dict[str, jnp.ndarray] = {}
+        for f in self.dynamic_fields():
+            v = p.weight if f == "weight" else p.extra[f]
+            if f in _INT_DYNAMIC:
+                out[f] = jnp.asarray(int(round(float(v))), jnp.int32)
+            else:
+                out[f] = jnp.asarray(float(v), jnp.float32)
+        return out
+
 
 # -- shared edge semantics (build and build_stages must agree exactly) -------
 
@@ -68,16 +124,32 @@ def _gather_inputs(e: Edge, xs: List[jnp.ndarray]) -> jnp.ndarray:
         [fit_buffer(v, e.params.data_size) for v in xs])
 
 
-def _edge_out(e: Edge, ei: int, x: jnp.ndarray, rng: jax.Array
-              ) -> jnp.ndarray:
+def _edge_out(e: Edge, ei: int, x: jnp.ndarray, rng: jax.Array,
+              dyn: Optional[Dict[str, jnp.ndarray]] = None) -> jnp.ndarray:
+    """Apply edge ``e`` — ``weight`` repeats as a ``fori_loop``.
+
+    ``dyn`` (from :meth:`ProxyDAG.dynamic_params`) overrides the weight and
+    shape-free extras with traced scalars; without it every value is baked
+    in statically (the loop still has a constant ``known_trip_count``, so
+    the HLO cost analyzer attributes repeats exactly while the jaxpr stays
+    O(1) in the weight).
+    """
     comp = get_component(e.component)
-    if e.params.weight == 0:                 # tuner pruned this edge
-        return fit_buffer(x, e.params.data_size)
-    out = x
-    for w in range(e.params.weight):         # weight = repeat count
-        r = jax.random.fold_in(rng, 10_000 + 131 * ei + w)
-        out = comp(fit_buffer(out, e.params.data_size), e.params, r)
-    return out
+    p = e.params
+    if dyn:
+        extra_dyn = {k: v for k, v in dyn.items() if k != "weight"}
+        if extra_dyn:
+            p = p.replace(extra={**p.extra, **extra_dyn})
+    w = dyn["weight"] if dyn and "weight" in dyn else p.weight
+    x0 = fit_buffer(x, p.data_size)
+    if isinstance(w, int) and w == 0:        # tuner pruned this edge
+        return x0
+
+    def body(i, out):
+        r = jax.random.fold_in(rng, 10_000 + 131 * ei + i)
+        return fit_buffer(comp(out, p, r), p.data_size)
+
+    return jax.lax.fori_loop(0, w, body, x0)
 
 
 def _accumulate(prev: Optional[jnp.ndarray], out: jnp.ndarray) -> jnp.ndarray:
@@ -117,26 +189,55 @@ class ProxyDAG:
         return [dataclasses.replace(e, params=e.params.rounded())
                 for e in self.edges]
 
+    # -- static / dynamic split ---------------------------------------------
+
+    def structure_key(self) -> Tuple:
+        """Hashable key of the DAG's compiled structure: topology, sources,
+        every edge's static structure.  Two DAGs with equal keys share one
+        compiled executable — only their dynamic param vectors differ."""
+        return (tuple(sorted(self.sources.items())),
+                tuple((tuple(e.src), e.dst, e.structure_key())
+                      for e in self.edges),
+                self.sink)
+
+    def dynamic_params(self) -> Tuple[Dict[str, jnp.ndarray], ...]:
+        """Per-edge dynamic param pytree, the second argument of
+        :meth:`build_parametric` — stepping any leaf value re-runs the
+        cached executable without retracing."""
+        return tuple(e.dynamic_values() for e in self.edges)
+
     # -- build ---------------------------------------------------------------
 
     def build(self) -> Callable[[jax.Array], jnp.ndarray]:
         """Returns a jit-able fn(rng) -> scalar executing the whole DAG."""
+        return self._build(parametric=False)
+
+    def build_parametric(self) -> Callable:
+        """Returns ``fn(rng, dyn) -> scalar`` where ``dyn`` is a
+        :meth:`dynamic_params`-shaped pytree of traced scalars — the
+        compile-once/run-many execution form."""
+        return self._build(parametric=True)
+
+    def _build(self, parametric: bool) -> Callable:
         self.validate()
         edges = self._rounded_edges()
         sources = dict(self.sources)
         sink = self.sink
 
-        def run(rng: jax.Array) -> jnp.ndarray:
+        def execute(rng: jax.Array, dyn) -> jnp.ndarray:
             nodes = _init_sources(sources, rng)
             for ei, e in enumerate(edges):
                 x = _gather_inputs(e, [nodes[s] for s in e.src])
-                out = _edge_out(e, ei, x, rng)
+                out = _edge_out(e, ei, x, rng,
+                                dyn=dyn[ei] if dyn is not None else None)
                 nodes[e.dst] = _accumulate(nodes.get(e.dst), out)
             if sink is not None:
                 return jnp.sum(nodes[sink])
             return sum(jnp.sum(nodes[t]) for t in _terminals(edges))
 
-        return run
+        if parametric:
+            return execute
+        return lambda rng: execute(rng, None)
 
     def build_stages(self):
         """Per-edge execution stages with semantics identical to ``build``.
@@ -155,6 +256,20 @@ class ProxyDAG:
         to float32 re-association from per-stage compilation (XLA fuses
         differently when each edge is jitted alone).
         """
+        init_fn, stages, finalize_fn = self.build_stages_parametric()
+        return (init_fn,
+                [(srcs, dst, (lambda s: lambda rng, xs, prev:
+                              s(rng, xs, prev, None))(stage))
+                 for srcs, dst, stage, _key in stages],
+                finalize_fn)
+
+    def build_stages_parametric(self):
+        """Compile-once form of :meth:`build_stages`: stages are
+        ``(src_names, dst, stage_fn, stage_key)`` with
+        ``stage_fn(rng, xs, prev, dyn_e)`` taking the edge's dynamic param
+        dict (or ``None`` for the baked-in static form) and ``stage_key``
+        the edge's :meth:`Edge.structure_key` — the cache key a staged
+        driver (the hadoop stack) reuses jitted stages under."""
         self.validate()
         edges = self._rounded_edges()
         sources = dict(self.sources)
@@ -164,12 +279,16 @@ class ProxyDAG:
             return _init_sources(sources, rng)
 
         def make_stage(e: Edge, ei: int):
-            def stage(rng, xs, prev):
-                out = _edge_out(e, ei, _gather_inputs(e, list(xs)), rng)
+            def stage(rng, xs, prev, dyn):
+                out = _edge_out(e, ei, _gather_inputs(e, list(xs)), rng,
+                                dyn=dyn)
                 return _accumulate(prev, out)
             return stage
 
-        stages = [(list(e.src), e.dst, make_stage(e, ei))
+        # the edge index seeds the per-repeat rng fold, so it is part of the
+        # stage identity alongside the structural key
+        stages = [(list(e.src), e.dst, make_stage(e, ei),
+                   (ei, e.structure_key()))
                   for ei, e in enumerate(edges)]
 
         def finalize_fn(nodes: Dict[str, jnp.ndarray]) -> jnp.ndarray:

@@ -12,10 +12,12 @@ The four tunables map 1:1 to the paper (§2.3, Table 2):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from ...kernels.dispatch import default_interpret, resolve_backend
 
 
 @dataclasses.dataclass
@@ -66,6 +68,52 @@ def as_u32(x: jnp.ndarray) -> jnp.ndarray:
     return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
 
 
+def loop_count(v: Any, default: int = 0):
+    """Coerce a repeat/round count into a ``fori_loop``-compatible bound.
+
+    Python numbers (the static path) round to a non-negative int; traced
+    scalars (a dynamic param stepped without retracing) pass through.
+    """
+    if v is None:
+        v = default
+    if isinstance(v, (int, float)):
+        return max(int(round(v)), 0)
+    return v
+
+
+def mix_u32(u: jnp.ndarray, rounds: Any, backend: Optional[str] = None
+            ) -> jnp.ndarray:
+    """murmur3-finalizer avalanche rounds over u32, backend-dispatched.
+
+    The hash-indexed dwarfs (logic ``hash``, statistic ``histogram`` /
+    ``grouped_count``) share this hot spot.  On the Pallas backend with a
+    static round count it runs :func:`repro.kernels.hash_mix.hash_mix`
+    (bit-identical to the XLA path); a traced round count — a dynamic
+    param — always takes the ``fori_loop`` XLA path, since kernel rounds
+    are compile-time static.
+    """
+    rounds = loop_count(rounds)
+    if isinstance(rounds, int):
+        if rounds <= 0:
+            return u
+        if resolve_backend(backend) == "pallas":
+            from ...kernels.hash_mix.ops import hash_mix
+            # resolve interpret here, not inside the jitted wrapper: as an
+            # explicit static arg it keys the jit cache, so flipping
+            # REPRO_PALLAS_INTERPRET can never hit a stale compilation
+            return hash_mix(u, rounds=rounds, interpret=default_interpret())
+    return jax.lax.fori_loop(0, rounds, lambda i, v: _mix32_round(v), u)
+
+
+def _mix32_round(u: jnp.ndarray) -> jnp.ndarray:
+    u = u ^ (u >> 16)
+    u = u * jnp.uint32(0x85EBCA6B)
+    u = u ^ (u >> 13)
+    u = u * jnp.uint32(0xC2B2AE35)
+    u = u ^ (u >> 16)
+    return u
+
+
 def u32_to_f32(u: jnp.ndarray) -> jnp.ndarray:
     """u32 -> well-behaved f32 in [0, 1) (avoids NaN-laden bitcasts)."""
     return (u >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
@@ -76,6 +124,30 @@ class DwarfComponent:
 
     name: str = "abstract"
     dwarf: str = "abstract"
+
+    #: ``extra`` keys that do not affect shapes: they may be passed as traced
+    #: scalars, so the tuner can step them without an XLA retrace.
+    dynamic_extras: Tuple[str, ...] = ()
+    #: subset of ``dynamic_extras`` that must stay static when this component
+    #: dispatches to a Pallas kernel (kernel loop bounds are compile-time).
+    pallas_static: Tuple[str, ...] = ()
+    #: whether a Pallas fast path exists for this component's hot spot
+    pallas_capable: bool = False
+
+    def uses_pallas(self, p: ComponentParams) -> bool:
+        return self.pallas_capable and resolve_backend(
+            p.extra.get("backend")) == "pallas"
+
+    def dynamic_fields(self, p: ComponentParams) -> Tuple[str, ...]:
+        """Names of this component's dynamic (retrace-free) tunables:
+        always ``weight`` (the DAG repeat count becomes a ``fori_loop``
+        bound) plus the declared dynamic extras actually present."""
+        static = set(self.pallas_static) if self.uses_pallas(p) else set()
+        return ("weight",) + tuple(
+            k for k in self.dynamic_extras
+            if k in p.extra and k not in static
+            and isinstance(p.extra[k], (int, float))
+            and not isinstance(p.extra[k], bool))
 
     def apply(self, x: jnp.ndarray, p: ComponentParams,
               rng: jax.Array) -> jnp.ndarray:

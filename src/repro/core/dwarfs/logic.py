@@ -5,18 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .base import (ComponentParams, DwarfComponent, as_u32, register,
-                   u32_to_f32)
-
-
-def _mix32(u: jnp.ndarray) -> jnp.ndarray:
-    """murmur3-style finalizer round (xor-shift-multiply avalanche)."""
-    u = u ^ (u >> 16)
-    u = u * jnp.uint32(0x85EBCA6B)
-    u = u ^ (u >> 13)
-    u = u * jnp.uint32(0xC2B2AE35)
-    u = u ^ (u >> 16)
-    return u
+from .base import (ComponentParams, DwarfComponent, _mix32_round as _mix32,
+                   as_u32, loop_count, mix_u32, register, u32_to_f32)
 
 
 @register
@@ -24,12 +14,14 @@ class HashComputation(DwarfComponent):
     name = "hash"
     dwarf = "logic"
 
+    dynamic_extras = ("rounds",)
+    pallas_static = ("rounds",)
+    pallas_capable = True
+
     def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
-        rounds = int(p.extra.get("rounds", 4))
-        u = as_u32(x)
-        for _ in range(rounds):
-            u = _mix32(u)
-        return u32_to_f32(u)
+        rounds = p.extra.get("rounds", 4)
+        return u32_to_f32(mix_u32(as_u32(x), rounds,
+                                  backend=p.extra.get("backend")))
 
 
 @register
@@ -39,17 +31,23 @@ class EncryptionRounds(DwarfComponent):
     name = "encryption"
     dwarf = "logic"
 
+    dynamic_extras = ("rounds",)
+
     def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
-        rounds = int(p.extra.get("rounds", 4))
+        rounds = loop_count(p.extra.get("rounds", 4))
         u = as_u32(x)
         n2 = (u.shape[0] // 2) * 2
-        v0, v1 = u[:n2:2], u[1:n2:2]
         k0, k1 = jnp.uint32(0x9E3779B9), jnp.uint32(0x7F4A7C15)
-        s = jnp.uint32(0)
-        for _ in range(rounds):
+
+        def round_fn(i, st):
+            s, v0, v1 = st
             s = s + k0
             v0 = v0 + (((v1 << 4) ^ (v1 >> 5)) + v1) ^ (s + k1)
             v1 = v1 + (((v0 << 4) ^ (v0 >> 5)) + v0) ^ (s + k0)
+            return (s, v0, v1)
+
+        _, v0, v1 = jax.lax.fori_loop(
+            0, rounds, round_fn, (jnp.uint32(0), u[:n2:2], u[1:n2:2]))
         out = jnp.stack([v0, v1], axis=1).reshape(-1)
         return u32_to_f32(jnp.concatenate([out, u[n2:]]))
 

@@ -49,10 +49,17 @@ class TopK(DwarfComponent):
     name = "top_k"
     dwarf = "sort"
 
+    pallas_capable = True
+
     def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
         rows = as_chunks(x, p)
         k = min(int(p.extra.get("k", 32)), rows.shape[1])
-        vals, _ = jax.lax.top_k(rows, k)
+        if self.uses_pallas(p):
+            from ...kernels.dispatch import default_interpret
+            from ...kernels.topk.ops import topk
+            vals, _ = topk(rows, k, interpret=default_interpret())
+        else:
+            vals, _ = jax.lax.top_k(rows, k)
         reps = -(-rows.shape[1] // k)
         return jnp.tile(vals, (1, reps))[:, : rows.shape[1]]
 

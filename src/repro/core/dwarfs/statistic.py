@@ -5,7 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .base import ComponentParams, DwarfComponent, as_chunks, as_u32, register
+from .base import (ComponentParams, DwarfComponent, as_chunks, as_u32,
+                   mix_u32, register)
 
 
 @register
@@ -24,14 +25,25 @@ class CountAverage(DwarfComponent):
 
 @register
 class Histogram(DwarfComponent):
-    """Bucketize + bincount (word-count / TF-IDF style counting)."""
+    """Hash-bucketize + bincount (word-count / TF-IDF style counting).
+
+    The bucket index is derived through murmur3 avalanche rounds
+    (``mix_rounds``, default 1) — the hash hot spot dispatches to the
+    ``kernels.hash_mix`` Pallas kernel on accelerator backends.
+    """
 
     name = "histogram"
     dwarf = "statistic"
 
+    dynamic_extras = ("mix_rounds",)
+    pallas_static = ("mix_rounds",)
+    pallas_capable = True
+
     def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
         bins = int(p.extra.get("bins", 256))
-        idx = (as_u32(x) % jnp.uint32(bins)).astype(jnp.int32)
+        u = mix_u32(as_u32(x), p.extra.get("mix_rounds", 1),
+                    backend=p.extra.get("backend"))
+        idx = (u % jnp.uint32(bins)).astype(jnp.int32)
         counts = jnp.zeros((bins,), jnp.float32).at[idx].add(1.0)
         return counts[idx] * (1.0 / x.shape[0])
 
@@ -52,14 +64,21 @@ class ProbabilityStats(DwarfComponent):
 
 @register
 class DegreeCount(DwarfComponent):
-    """Grouped counting via segment-sum (out/in degree counting)."""
+    """Grouped counting via segment-sum (out/in degree counting); the
+    hash-derived group id dispatches like :class:`Histogram`."""
 
     name = "grouped_count"
     dwarf = "statistic"
 
+    dynamic_extras = ("mix_rounds",)
+    pallas_static = ("mix_rounds",)
+    pallas_capable = True
+
     def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
         groups = int(p.extra.get("groups", 128))
-        gid = (as_u32(x) % jnp.uint32(groups)).astype(jnp.int32)
+        u = mix_u32(as_u32(x), p.extra.get("mix_rounds", 1),
+                    backend=p.extra.get("backend"))
+        gid = (u % jnp.uint32(groups)).astype(jnp.int32)
         sums = jax.ops.segment_sum(x, gid, num_segments=groups)
         cnts = jax.ops.segment_sum(jnp.ones_like(x), gid, num_segments=groups)
         means = sums / jnp.maximum(cnts, 1.0)

@@ -1,0 +1,225 @@
+"""Compile-once/run-many measurement engine for DAG proxies.
+
+The auto-tuner (paper §2.3) re-measures the proxy after every parameter
+probe and every adjustment step.  The seed paid a full XLA lower+compile
+per measurement — and, because weights were Python-unrolled, that compile
+scaled with total DAG weight.  This engine makes the run-many regime cheap
+by splitting measurement along the same static/dynamic boundary as
+``ProxyDAG``:
+
+* **Structural metrics** (instruction mix, arithmetic intensity, …) come
+  from a *compositional* cost model: each edge's single-repeat body is
+  lowered, compiled and HLO-analyzed **once per static structure key** and
+  cached process-wide; a proxy's report is then
+
+      sources + Σ_edge weight_e × body_e + finalize
+
+  so stepping any dynamic param (weight, shape-free extras) is pure
+  arithmetic — zero compiles, zero traces.  Changing a shape-affecting
+  param recompiles only the touched edge.
+* **Rate metrics** (mips / flop_rate / mem_bw analogs, ``execute=True``)
+  additionally time a real execution through a cached parametric
+  executable (one compile per DAG structure key; dynamic params are jitted
+  arguments, so weight sweeps re-run the same compiled program).
+
+``stats()`` exposes compile/trace counters so tests and benchmarks can
+assert the no-retrace contract.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .dag import _INT_DYNAMIC, ProxyDAG, _init_sources, _terminals
+from .dwarfs import get_component
+from .dwarfs.base import fit_buffer
+from .metrics import CostReport, analyze_hlo_text, metric_vector
+
+# process-wide caches: structure keys are value-hashable, so clones and
+# re-built DAGs with identical structure share entries.  Report caches hold
+# small dataclasses and can grow large; the executable cache retains
+# compiled XLA programs, so it is kept tight (FIFO eviction)
+_BODY_CACHE: Dict[Tuple, CostReport] = {}
+_PIECE_CACHE: Dict[Tuple, CostReport] = {}
+_EXEC_CACHE: Dict[Tuple, Callable] = {}
+
+_REPORT_CACHE_CAP = 4096
+_EXEC_CACHE_CAP = 128
+
+
+def _evict_oldest(cache: Dict, cap: int) -> None:
+    while len(cache) > cap:
+        cache.pop(next(iter(cache)))
+
+_STATS = {"compiles": 0, "traces": 0, "hits": 0, "exec_compiles": 0}
+
+
+def stats() -> Dict[str, int]:
+    """Counters of engine compile/trace activity (monotonic)."""
+    return dict(_STATS)
+
+
+def reset_stats() -> None:
+    for k in _STATS:
+        _STATS[k] = 0
+
+
+def clear_caches() -> None:
+    """Drop every cached report/executable (tests and benchmarks use this
+    to measure cold-vs-warm behaviour)."""
+    _BODY_CACHE.clear()
+    _PIECE_CACHE.clear()
+    _EXEC_CACHE.clear()
+
+
+def _analyze(fn: Callable, args: Tuple) -> CostReport:
+    """Lower+compile ``fn`` (abstract args are fine) and analyze its HLO."""
+    _STATS["compiles"] += 1
+    compiled = jax.jit(fn).lower(*args).compile()
+    return analyze_hlo_text(compiled.as_text())
+
+
+def _rng_spec() -> jax.Array:
+    return jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# compositional pieces
+# ---------------------------------------------------------------------------
+
+
+def _body_key(e) -> Tuple:
+    """Body-report cache key.  Unlike the *executable* caches (where dynamic
+    extras are jitted arguments), the analyzed body HLO bakes the current
+    dynamic-extra values in (e.g. hash ``rounds`` sets a loop trip count),
+    so the report is only valid for those values — weight alone stays
+    factored out as the linear multiplier."""
+    p = e.params.rounded()
+    dyn_vals = tuple(sorted(
+        (k, int(round(float(p.extra[k]))) if k in _INT_DYNAMIC
+         else float(p.extra[k]))
+        for k in e.dynamic_fields() if k != "weight"))
+    return (e.structure_key(), dyn_vals)
+
+
+def _body_report(e) -> CostReport:
+    """Cost of ONE repeat of edge ``e`` (the fori_loop body): component
+    application + the fit-back glue, exactly as ``dag._edge_out`` traces it."""
+    key = _body_key(e)
+    rep = _BODY_CACHE.get(key)
+    if rep is not None:
+        _STATS["hits"] += 1
+        return rep
+    p = e.params.rounded()
+    comp = get_component(e.component)
+
+    def body(x, rng):
+        return fit_buffer(comp(x, p, jax.random.fold_in(rng, 0)), p.data_size)
+
+    x_spec = jax.ShapeDtypeStruct((p.data_size,), jnp.float32)
+    rep = _analyze(body, (x_spec, _rng_spec()))
+    _BODY_CACHE[key] = rep
+    _evict_oldest(_BODY_CACHE, _REPORT_CACHE_CAP)
+    return rep
+
+
+def _sources_report(sources: Tuple[Tuple[str, int], ...]) -> CostReport:
+    key = ("sources", sources)
+    rep = _PIECE_CACHE.get(key)
+    if rep is not None:
+        _STATS["hits"] += 1
+        return rep
+    rep = _analyze(lambda rng: _init_sources(dict(sources), rng),
+                   (_rng_spec(),))
+    _PIECE_CACHE[key] = rep
+    return rep
+
+
+def _finalize_report(n: int) -> CostReport:
+    key = ("finalize", n)
+    rep = _PIECE_CACHE.get(key)
+    if rep is not None:
+        _STATS["hits"] += 1
+        return rep
+    rep = _analyze(lambda x: jnp.sum(x),
+                   (jax.ShapeDtypeStruct((max(n, 1),), jnp.float32),))
+    _PIECE_CACHE[key] = rep
+    return rep
+
+
+def _sink_sizes(dag: ProxyDAG) -> int:
+    """Element count feeding the final reduction(s)."""
+    sizes = {name: int(n) for name, n in dag.sources.items()}
+    for e in dag.edges:
+        sizes[e.dst] = e.params.rounded().data_size
+    if dag.sink is not None:
+        return sizes.get(dag.sink, 1)
+    return sum(sizes.get(t, 1) for t in _terminals(dag.edges))
+
+
+def structural_report(dag: ProxyDAG) -> CostReport:
+    """Whole-proxy cost report assembled from cached per-edge pieces."""
+    total = CostReport()
+    total.add(_sources_report(tuple(sorted(dag.sources.items()))))
+    for e in dag.edges:
+        w = float(e.params.rounded().weight)
+        if w > 0:
+            total.add(_body_report(e), mult=w)
+    total.add(_finalize_report(_sink_sizes(dag)))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# cached execution (rate metrics)
+# ---------------------------------------------------------------------------
+
+
+def executable(dag: ProxyDAG) -> Callable[[jax.Array], Any]:
+    """Cached compiled runner for ``dag``: ``fn(rng) -> scalar`` binding the
+    dag's *current* dynamic params as jitted arguments.  One compile per
+    structure key; stepping weights/extras re-uses the executable."""
+    key = dag.structure_key()
+    jfn = _EXEC_CACHE.get(key)
+    if jfn is None:
+        _STATS["exec_compiles"] += 1
+        pfn = dag.build_parametric()
+
+        def counted(rng, dyn):
+            _STATS["traces"] += 1
+            return pfn(rng, dyn)
+
+        jfn = jax.jit(counted)
+        _EXEC_CACHE[key] = jfn
+        _evict_oldest(_EXEC_CACHE, _EXEC_CACHE_CAP)
+    else:
+        _STATS["hits"] += 1
+    return lambda rng: jfn(rng, dag.dynamic_params())
+
+
+def measure(dag: ProxyDAG, execute: bool = False, exec_iters: int = 1,
+            host_bytes: float = 0.0) -> Dict[str, float]:
+    """The tuner's metric vector for ``dag`` under the compile-once contract.
+
+    ``execute=False``: compositional structural metrics only (no tracing
+    once edges are cached).  ``execute=True``: additionally times the
+    cached executable to derive the rate metrics (mips / flop_rate /
+    mem_bw), still without retracing across dynamic-param steps.
+    """
+    report = structural_report(dag)
+    exec_s = 0.0
+    if execute:
+        cold = dag.structure_key() not in _EXEC_CACHE
+        fn = executable(dag)
+        rng = jax.random.PRNGKey(0)
+        if cold:                             # exclude compile from the timing
+            jax.block_until_ready(fn(rng))
+        t0 = time.perf_counter()
+        for _ in range(max(exec_iters, 1)):
+            out = fn(rng)
+        jax.block_until_ready(out)
+        exec_s = (time.perf_counter() - t0) / max(exec_iters, 1)
+    return metric_vector(report, host_bytes=host_bytes, exec_time=exec_s)

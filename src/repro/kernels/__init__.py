@@ -2,5 +2,9 @@
 # matrix dwarf (matmul), LM attention (flash_attention), sort dwarf /
 # MoE router (topk), logic dwarf (hash_mix).  Each: kernel.py
 # (pl.pallas_call + BlockSpec VMEM tiling) + ops.py (jit wrapper) + ref.py
-# (pure-jnp oracle).  Validated with interpret=True on CPU; TPU is the
-# compile target.
+# (pure-jnp oracle).  ``dispatch`` owns backend selection: interpret mode is
+# auto-detected from the platform (CPU interprets, TPU/GPU compile) and the
+# dwarf layer routes its hot spots here when the resolved backend is "pallas".
+from .dispatch import BACKENDS, default_interpret, resolve_backend
+
+__all__ = ["BACKENDS", "default_interpret", "resolve_backend"]

@@ -1,0 +1,51 @@
+"""Backend selection for the Pallas fast path.
+
+Two independent knobs, both resolved lazily (importing this module must not
+initialize the JAX backend):
+
+* **backend** — whether a dwarf hot spot runs the hand-written Pallas kernel
+  (``"pallas"``) or the stock XLA lowering (``"xla"``).  ``"auto"`` picks
+  Pallas on accelerators and XLA on CPU, where the only Pallas execution
+  path is the slow interpreter.  Per-edge override:
+  ``ComponentParams.extra["backend"]``; process-wide override: the
+  ``REPRO_BACKEND`` environment variable.
+* **interpret** — whether ``pl.pallas_call`` runs under the Pallas
+  interpreter (the debug path) instead of compiling for the platform.
+  Auto-detected from ``jax.default_backend()`` (CPU has no Mosaic/Triton
+  lowering, so it must interpret); ``REPRO_PALLAS_INTERPRET=0/1`` forces it.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+BACKENDS = ("auto", "pallas", "xla")
+
+#: platforms with a real (non-interpreter) Pallas lowering
+_PALLAS_PLATFORMS = ("tpu", "gpu")
+
+
+def default_interpret(platform: Optional[str] = None) -> bool:
+    """True when Pallas kernels must run under the interpreter here."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    p = platform or jax.default_backend()
+    return p not in _PALLAS_PLATFORMS
+
+
+def resolve_backend(requested: Optional[str] = None) -> str:
+    """Resolve a backend request to a concrete ``"pallas"`` or ``"xla"``.
+
+    Precedence: explicit ``requested`` (a component's
+    ``extra["backend"]``) > ``REPRO_BACKEND`` env var > ``"auto"``.
+    """
+    b = requested or os.environ.get("REPRO_BACKEND") or "auto"
+    if b not in BACKENDS:
+        raise ValueError(f"unknown backend {b!r}; expected one of {BACKENDS}")
+    if b == "auto":
+        return "pallas" if jax.default_backend() in _PALLAS_PLATFORMS else "xla"
+    return b

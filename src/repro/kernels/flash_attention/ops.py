@@ -3,10 +3,12 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..dispatch import default_interpret
 from .kernel import flash_attention_kernel
 
 
@@ -14,13 +16,15 @@ from .kernel import flash_attention_kernel
                                              "interpret"))
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, block_q: int = 128,
-                    block_kv: int = 128, interpret: bool = True
+                    block_kv: int = 128, interpret: Optional[bool] = None
                     ) -> jnp.ndarray:
     """(B, S, H, hd)-layout attention via the Pallas TPU kernel.
 
     Pads Sq/Skv to the block grid; padding is masked inside the kernel via
     ``kv_len`` and discarded on return.
     """
+    if interpret is None:
+        interpret = default_interpret()
     B, Sq, H, hd = q.shape
     Skv, Kv = k.shape[1], k.shape[2]
     qt = q.transpose(0, 2, 1, 3)

@@ -1,15 +1,19 @@
 """jit'd wrapper for hash_mix (flat input reshaped to lanes)."""
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..dispatch import default_interpret
 from .kernel import hash_mix_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("rounds", "lanes", "interpret"))
 def hash_mix(x: jnp.ndarray, *, rounds: int = 2, lanes: int = 128,
-             interpret: bool = True) -> jnp.ndarray:
+             interpret: Optional[bool] = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = default_interpret()
     flat = x.reshape(-1)
     n = flat.shape[0]
     pad = (-n) % lanes

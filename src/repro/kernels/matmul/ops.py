@@ -1,9 +1,11 @@
 """jit'd wrapper with shape padding for the tiled matmul kernel."""
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..dispatch import default_interpret
 from .kernel import matmul_kernel
 
 
@@ -11,7 +13,9 @@ from .kernel import matmul_kernel
                                              "interpret"))
 def matmul(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int = 128,
            block_n: int = 128, block_k: int = 128,
-           interpret: bool = True) -> jnp.ndarray:
+           interpret: Optional[bool] = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = default_interpret()
     M, K = a.shape
     _, N = b.shape
     bm, bn, bk = (min(block_m, M), min(block_n, N), min(block_k, K))

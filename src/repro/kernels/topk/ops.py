@@ -1,15 +1,19 @@
 """jit'd wrapper for the top-k kernel (row padding)."""
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..dispatch import default_interpret
 from .kernel import topk_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_m", "interpret"))
 def topk(x: jnp.ndarray, k: int, *, block_m: int = 256,
-         interpret: bool = True):
+         interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = default_interpret()
     M, N = x.shape
     bm = min(block_m, M)
     pm = (-M) % bm

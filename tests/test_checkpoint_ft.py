@@ -75,6 +75,9 @@ def test_resilient_loop_recovers_from_failures(tmp_path, rng):
 
 def test_elastic_restore_with_new_shardings(tmp_path, rng):
     """A checkpoint restores onto a different mesh (elastic scaling)."""
+    if not hasattr(jax.sharding, "AxisType") or not hasattr(jax, "P"):
+        pytest.skip("explicit mesh axis types (jax.sharding.AxisType / "
+                    "jax.P) require jax >= 0.5")
     cfg, model, state = _tiny_state(rng)
     save_checkpoint(state, str(tmp_path), step=1)
     mesh = jax.make_mesh((1, 1), ("data", "model"),
