@@ -17,10 +17,11 @@ from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.api import ProxySpec, cache_stats, get_stack
+from repro.api import ParamSpace, ProxySpec, cache_stats, get_stack
 from repro.core import engine
-from repro.core.autotune import AutoTuner
+from repro.core.autotune import AutoTuner, PopulationTuner
 from repro.core.dag import (_accumulate, _gather_inputs, _init_sources,
                             _terminals)
 from repro.core.dwarfs import get_component
@@ -36,6 +37,8 @@ REFERENCE = "terasort"
 N_STEADY = int(os.environ.get("REPRO_BENCH_STEADY_ITERS", "8"))
 SWEEP_WEIGHTS = (1, 2, 4, 8, 16, 32, 64)
 TUNE_ITERS = int(os.environ.get("REPRO_BENCH_TUNE_ITERS", "6"))
+N_POP = int(os.environ.get("REPRO_BENCH_POPULATION", "16"))
+POP_STEPS = int(os.environ.get("REPRO_BENCH_POP_STEPS", "4"))
 
 
 def _reference_proxy():
@@ -146,10 +149,125 @@ def bench_autotune_sweep() -> Dict[str, float]:
     }
 
 
+def _tuner_generation_candidates(space, base, step: int) -> "np.ndarray":
+    """A tuner-generation-shaped candidate batch: multiplicative jitter of
+    the dynamic leaves around the current point (what an evolution step
+    actually draws), not a full log-uniform resample — execution cost of a
+    vmapped batched ``while`` is ``max`` over candidates, so the candidate
+    spread is part of the workload definition."""
+    rs = np.random.RandomState(step)
+    dyn = space.dynamic_mask()
+    matrix = np.tile(base, (N_POP, 1))
+    jitter = rs.uniform(0.5, 2.0, size=(N_POP, int(dyn.sum())))
+    matrix[:, dyn] = np.maximum(matrix[:, dyn], 1.0) * jitter
+    # clamp only the dynamic columns: static leaves define the shared
+    # structure and may legitimately sit outside the nominal bounds
+    matrix[:, dyn] = space.clamp(matrix)[:, dyn]
+    return matrix
+
+
+def bench_population_sweep() -> Dict[str, float]:
+    """A population-tuner sweep over the reference proxy: per step, score
+    all ``N_POP`` candidates (vectorized compositional engine) and execute
+    them (one vmapped call) — against the pre-PR sequential loop
+    (per-candidate clone + ``engine.measure`` + ``stack.run``).  The
+    population path must compile at most as many executables as a single
+    candidate and retrace zero times across the sweep."""
+    stack = get_stack("openmp")
+    rng = jax.random.PRNGKey(0)
+    proxy = _reference_proxy()
+    space = ParamSpace.from_dag(proxy.dag)
+    base = space.values(proxy.dag)
+    mats = [_tuner_generation_candidates(space, base, s)
+            for s in range(POP_STEPS)]
+
+    # executable accounting on *cold* per-instance caches: how many
+    # compiles does one candidate cost vs a 16-candidate population?
+    from repro.api.stack import OpenMPStack
+    m0 = cache_stats()["misses"]
+    OpenMPStack().run(proxy, rng=rng)
+    single_compiles = cache_stats()["misses"] - m0
+    m1 = cache_stats()["misses"]
+    OpenMPStack().run_population(proxy, mats[0], space=space)
+    population_compiles = cache_stats()["misses"] - m1
+
+    engine.measure(proxy.dag)                   # warm the per-edge caches
+    scorer = engine.PopulationScorer(proxy.dag, space)
+    scorer(mats[0])                             # warm (nothing to compile)
+    stack.run(proxy, rng=rng)                   # warm the shared stack
+    stack.run_population(proxy, mats[0], space=space)
+
+    # candidate-evaluation sweep (the tuner scoring hot path)
+    t0 = cache_stats()["traces"]
+    e0 = engine.stats()
+    t = time.perf_counter()
+    for m in mats:
+        scorer(m)
+    eval_pop_s = time.perf_counter() - t
+
+    # vmapped execution sweep (one compiled call per candidate batch)
+    t = time.perf_counter()
+    for m in mats:
+        stack.run_population(proxy, m, space=space)
+    exec_pop_s = time.perf_counter() - t
+    pop_retraces = cache_stats()["traces"] - t0
+    pop_engine_traces = engine.stats()["traces"] - e0["traces"]
+
+    # sequential baseline: the pre-PR per-candidate evaluation loop
+    t = time.perf_counter()
+    for m in mats:
+        for row in m:
+            trial = proxy.clone()
+            space.apply(trial.dag, row)
+            engine.measure(trial.dag)
+    eval_seq_s = time.perf_counter() - t
+    t = time.perf_counter()
+    for m in mats:
+        for row in m:
+            trial = proxy.clone()
+            space.apply(trial.dag, row)
+            stack.run(trial, rng=rng)
+    exec_seq_s = time.perf_counter() - t
+
+    # population-tuner smoke: a real (tiny) tuning run end to end
+    target = engine.measure(_reference_proxy().dag)
+    smoke = _reference_proxy()
+    smoke.dag.edges[2].params.weight = 1
+    smoke.dag.edges[3].params.weight = 8
+    t = time.perf_counter()
+    res = PopulationTuner(target, tol=0.10, population=8, generations=2,
+                          seed=0).tune(smoke)
+    tuner_smoke_s = time.perf_counter() - t
+
+    return {
+        "population": N_POP,
+        "steps": POP_STEPS,
+        # candidate evaluation (scoring): the >=5x tuner-throughput axis
+        "eval_population_s": eval_pop_s,
+        "eval_sequential_s": eval_seq_s,
+        "speedup_x": eval_seq_s / max(eval_pop_s, 1e-9),
+        # vmapped execution: one compiled call per batch (CPU wall-clock is
+        # max-over-candidates bound; the candidate axis shards on a mesh)
+        "exec_population_s": exec_pop_s,
+        "exec_sequential_s": exec_seq_s,
+        "exec_speedup_x": exec_seq_s / max(exec_pop_s, 1e-9),
+        # compile-once contract
+        "executables_single_candidate": single_compiles,
+        "executables_16_candidates": population_compiles,
+        "population_retraces": pop_retraces,
+        "population_engine_traces": pop_engine_traces,
+        # end-to-end tuner smoke
+        "tuner_smoke_s": tuner_smoke_s,
+        "tuner_smoke_accuracy": res.final_accuracy.get("avg", 0.0),
+        "tuner_smoke_candidates": res.candidates_evaluated,
+    }
+
+
 def bench_compile_vs_run() -> List[str]:
     run_path = bench_engine_run_path()
     sweep = bench_weight_sweep()
     tune = bench_autotune_sweep()
+    population = bench_population_sweep()
     payload = {
         "jax_version": jax.__version__,
         "platform": jax.default_backend(),
@@ -157,6 +275,7 @@ def bench_compile_vs_run() -> List[str]:
         "run_path": run_path,
         "weight_sweep": sweep,
         "autotune_sweep": tune,
+        "population_sweep": population,
         "engine_stats": engine.stats(),
         "stack_cache_stats": cache_stats(),
     }
@@ -176,6 +295,12 @@ def bench_compile_vs_run() -> List[str]:
                 f"engine_s={tune['engine_s']:.3f};"
                 f"profile_s={tune['profile_s']:.3f};"
                 f"speedup={tune['speedup_x']:.1f}x"),
+        csv_row("engine/population_sweep", population["eval_population_s"] * 1e6,
+                f"eval_speedup={population['speedup_x']:.1f}x;"
+                f"exec_speedup={population['exec_speedup_x']:.1f}x;"
+                f"retraces={population['population_retraces']:.0f};"
+                f"executables_16={population['executables_16_candidates']:.0f};"
+                f"tuner_smoke_s={population['tuner_smoke_s']:.2f}"),
     ]
 
 

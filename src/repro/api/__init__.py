@@ -4,13 +4,18 @@ Three public surfaces, one contract:
 
 * **Stack protocol** (:mod:`repro.api.stack`): ``get_stack(name).run(x)``
   executes any proxy DAG, workload, or raw fn on any software stack
-  (openmp / mpi / spark / hadoop) and returns a uniform :class:`RunReport`.
+  (openmp / mpi / spark / hadoop) and returns a uniform :class:`RunReport`;
+  ``run_batch`` vmaps over rng batches and ``run_population`` evaluates a
+  whole batch of dynamic-param candidates in one compiled call (the
+  batched-autotuning axis, candidate batch sharded over the stack's mesh).
 * **Versioned ProxySpec** (:mod:`repro.api.spec`): declarative,
   schema-validated JSON specs with a full ``to_json``/``from_json``
   round-trip.
 * **Pytree parameter space** (:mod:`repro.api.params`): every tunable
   flattened into a named, bounded vector for the auto-tuner and for
-  gradient-free vectorized tuners.
+  gradient-free vectorized tuners — ``sample``/``sample_dynamic`` draw
+  candidate matrices, ``stack_candidates``/``unstack_candidates`` convert
+  between matrices and the batched dyn pytrees the executables consume.
 
 Quickstart::
 

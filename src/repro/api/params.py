@@ -17,6 +17,7 @@ interface ``dag.edges[i].component / .params``.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -32,6 +33,13 @@ FIELD_BOUNDS: Dict[str, Tuple[float, float]] = {
     "weight": (0.0, 128.0),
     "fraction": (0.05, 1.0),
     "stride": (1.0, 64.0),
+    # loop-count extras: execution cost is linear in these, so the generic
+    # EXTRA_BOUNDS ceiling (4M) would let a random tuner draw candidates
+    # that run for hours; real hash/mix pipelines use a handful of rounds
+    "rounds": (1.0, 64.0),
+    "mix_rounds": (1.0, 16.0),
+    "hops": (1.0, 64.0),
+    "levels": (1.0, 16.0),
 }
 
 #: fallback bounds for numeric ``extra`` entries (centers, vertices, bins, ...)
@@ -65,6 +73,27 @@ class ParamLeaf:
     @property
     def is_extra(self) -> bool:
         return self.field not in CORE_FIELDS
+
+    def effective_bounds(self) -> Tuple[float, float]:
+        """Bounds every clamped value must satisfy *after* integral
+        rounding.  For integer leaves the interval tightens to the integers
+        inside ``[lo, hi]`` — rounding a clamped value must never escape
+        the nominal bounds (e.g. ``hi=7.5`` clamping 8.0 to 7.5 and then
+        rounding back up to 8.0)."""
+        if not self.integer:
+            return (self.lo, self.hi)
+        lo_i = math.ceil(self.lo)
+        hi_i = math.floor(self.hi)
+        if hi_i < lo_i:            # no integer inside: degenerate interval
+            lo_i = hi_i = round((self.lo + self.hi) / 2.0)
+        return (float(lo_i), float(hi_i))
+
+    def clamp_value(self, v: float) -> float:
+        """One value clamped into bounds, integral-safe (round *inside*
+        the bounds, never out of them)."""
+        lo, hi = self.effective_bounds()
+        v = float(min(max(float(v), lo), hi))
+        return float(min(max(round(v), lo), hi)) if self.integer else v
 
 
 def _is_numeric(v: Any) -> bool:
@@ -164,9 +193,7 @@ class ParamSpace:
             if v == self._read_leaf(dag, l):
                 continue
             if clamp:
-                v = float(min(max(v, l.lo), l.hi))
-                if l.integer:
-                    v = float(round(v))
+                v = l.clamp_value(v)
             p = dag.edges[l.edge_idx].params
             if l.is_extra:
                 p.extra[l.field] = v
@@ -199,19 +226,116 @@ class ParamSpace:
 
     # -- vectorized-tuner support -------------------------------------------
 
+    def dynamic_mask(self) -> np.ndarray:
+        """Boolean mask over leaves: True for retrace-free tunables."""
+        return np.array([l.dynamic for l in self.leaves], dtype=bool)
+
     def clamp(self, values: np.ndarray) -> np.ndarray:
+        """Clamp a vector (or ``(n, len(self))`` matrix) of candidate
+        values into bounds.  Integer leaves round *inside* their bounds:
+        the result always satisfies ``lower() <= v <= upper()`` leaf-wise,
+        even for fractional bounds where plain round-after-clamp would
+        drift out (the population tuners rely on this invariant)."""
         v = np.minimum(np.maximum(np.asarray(values, np.float64),
                                   self.lower()), self.upper())
-        ints = np.array([l.integer for l in self.leaves])
-        v[ints] = np.round(v[ints])
+        ints = np.array([l.integer for l in self.leaves], dtype=bool)
+        if ints.any():
+            eff = np.array([l.effective_bounds() for l in self.leaves],
+                           dtype=np.float64)
+            lo_i, hi_i = eff[ints, 0], eff[ints, 1]
+            v[..., ints] = np.minimum(np.maximum(
+                np.round(np.minimum(np.maximum(v[..., ints], lo_i), hi_i)),
+                lo_i), hi_i)
         return v
 
     def sample(self, n: int, seed: int = 0) -> np.ndarray:
         """(n, len(self)) log-uniform candidate vectors within bounds —
-        the entry point for gradient-free vectorized tuners."""
+        the entry point for gradient-free vectorized tuners.  Deterministic
+        for a fixed seed (``np.random.RandomState`` is specified to be
+        stable across processes and platforms)."""
         rs = np.random.RandomState(seed)
         lo, hi = self.lower(), self.upper()
         llo = np.log(np.maximum(lo, 1e-3))
         lhi = np.log(np.maximum(hi, 1e-3))
         raw = np.exp(rs.uniform(llo, lhi, size=(n, len(self.leaves))))
-        return np.stack([self.clamp(r) for r in raw])
+        return self.clamp(raw)
+
+    def sample_dynamic(self, n: int, base: Sequence[float],
+                       seed: int = 0) -> np.ndarray:
+        """(n, len(self)) candidates that resample only the *dynamic*
+        leaves (log-uniform within bounds) and keep every static leaf at
+        ``base`` — the population shares one compiled structure, so a
+        whole batch evaluates through a single vmapped executable."""
+        base = np.asarray(base, np.float64)
+        if base.shape != (len(self.leaves),):
+            raise ValueError(f"base must have shape ({len(self.leaves)},), "
+                             f"got {base.shape}")
+        out = np.tile(base, (n, 1))
+        dyn = self.dynamic_mask()
+        if dyn.any():
+            out[:, dyn] = self.sample(n, seed=seed)[:, dyn]
+        return out
+
+    # -- population pytrees (stack/unstack between sample() matrices and
+    #    the dyn pytrees ProxyDAG.build_population consumes) ----------------
+
+    def _dynamic_columns(self, dag) -> List[Tuple[int, int, str]]:
+        """(leaf_idx, edge_idx, field) for each dynamic leaf, ordered to
+        match ``dag.dynamic_params()``'s per-edge dict layout."""
+        cols = []
+        for i, e in enumerate(dag.edges):
+            prefix = f"e{i}.{e.component}"
+            fields = e.dynamic_fields() if hasattr(e, "dynamic_fields") \
+                else ("weight",)
+            for f in fields:
+                cols.append((self._index[f"{prefix}.{f}"], i, f))
+        return cols
+
+    def stack_candidates(self, dag, matrix: np.ndarray, strict: bool = True):
+        """Stack ``(n, len(self))`` candidate rows into one batched
+        dynamic-param pytree (the candidate axis leading every leaf) for
+        :meth:`ProxyDAG.build_population` / ``Stack.run_population``.
+
+        ``dag.dynamic_params()`` is the layout/dtype template: each dynamic
+        leaf's matrix column becomes that leaf's stacked value.  Static
+        columns cannot ride along — the whole population shares the dag's
+        compiled structure — so ``strict=True`` (default) raises if any
+        static column deviates from the dag's current value instead of
+        silently ignoring it."""
+        import jax.numpy as jnp   # lazy: this module stays numpy-importable
+
+        matrix = np.asarray(matrix, np.float64)
+        if matrix.ndim != 2 or matrix.shape[1] != len(self.leaves):
+            raise ValueError(f"expected a (n, {len(self.leaves)}) candidate "
+                             f"matrix, got shape {matrix.shape}")
+        if strict:
+            static = ~self.dynamic_mask()
+            cur = self.values(dag)[static]
+            bad = np.nonzero((matrix[:, static] != cur).any(axis=0))[0]
+            if bad.size:
+                names = [np.array(self.names)[static][b] for b in bad[:4]]
+                raise ValueError(
+                    f"candidate matrix changes static leaves {names} — a "
+                    f"population shares one compiled structure; tune static "
+                    f"leaves through the engine cost model instead (or pass "
+                    f"strict=False to pin them to the dag's current values)")
+        template = dag.dynamic_params()
+        batched = [dict(d) for d in template]
+        for li, ei, field in self._dynamic_columns(dag):
+            col = matrix[:, li]
+            tmpl = template[ei][field]
+            if jnp.issubdtype(tmpl.dtype, jnp.integer):
+                col = np.round(col)
+            batched[ei][field] = jnp.asarray(col, tmpl.dtype)
+        return tuple(batched)
+
+    def unstack_candidates(self, batched) -> List[Tuple[Dict[str, Any], ...]]:
+        """Split a stacked dyn pytree back into per-candidate pytrees
+        (each shaped like ``dag.dynamic_params()``) — the sequential-
+        evaluation form the population property tests loop over."""
+        sizes = {int(v.shape[0]) for d in batched for v in d.values()}
+        if len(sizes) > 1:
+            raise ValueError(f"inconsistent candidate-axis sizes: {sizes}")
+        n = sizes.pop() if sizes else 0
+        return [tuple({k: v[i] for k, v in d.items()} for d in batched)
+                for i in range(n)]

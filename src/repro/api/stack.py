@@ -228,6 +228,65 @@ class Stack(abc.ABC):
         jax.block_until_ready(out)
         return out, 0.0
 
+    # -- population evaluation (one compiled call per candidate batch) -------
+
+    def _compiled_dag_population(self, dag: ProxyDAG, n: int) -> Callable:
+        """Cached jitted ``fn(rng, dyn_batched)`` evaluating ``n``
+        dynamic-param candidates of one structure in a single call.  Keyed
+        on (structure key, population size): every candidate batch of the
+        same shape reuses it — zero retraces per candidate."""
+        cache = self.__dict__.setdefault("_dag_cache", {})
+        key = (("population", n), dag.structure_key())
+        fn = cache.get(key)
+        if fn is None:
+            CACHE_STATS["misses"] += 1
+            fn = self._wrap_population(dag, n)
+            cache[key] = fn
+            _evict_oldest(cache)
+        else:
+            CACHE_STATS["hits"] += 1
+        return fn
+
+    def _wrap_population(self, dag: ProxyDAG, n: int) -> Callable:
+        """Bake this stack's execution model into the canonical vmapped
+        population form (:meth:`ProxyDAG.build_population`).  No buffer
+        donation: callers may reuse a stacked dyn pytree across calls."""
+        pop = dag.build_population()
+
+        def f(rng, dynb):
+            CACHE_STATS["traces"] += 1
+            return pop(rng, dynb)
+
+        return jax.jit(f)
+
+    def _dag_run_population(self, dag: ProxyDAG, rng: jax.Array,
+                            dynb: Tuple, n: int) -> Tuple[Any, float]:
+        out = self._compiled_dag_population(dag, n)(rng, dynb)
+        jax.block_until_ready(out)
+        return out, 0.0
+
+    def _coerce_population(self, dag: ProxyDAG, candidates: Any,
+                           space: Any) -> Tuple[Tuple, int]:
+        """Coerce a ``(n, len(space))`` candidate matrix (or an already
+        stacked dyn pytree) into the batched dyn pytree + its size."""
+        if getattr(candidates, "ndim", None) == 2:
+            if space is None:
+                from .params import ParamSpace
+                space = ParamSpace.from_dag(dag)
+            dynb = space.stack_candidates(dag, candidates)
+        else:
+            dynb = candidates
+        sizes = {int(v.shape[0]) if len(v.shape) else None
+                 for d in dynb for v in d.values()}
+        if len(sizes) != 1 or None in sizes:
+            raise ValueError(
+                f"cannot infer the population size from candidate-axis "
+                f"sizes {sorted(sizes, key=str)}: pass a (n, len(space)) "
+                f"matrix or a pytree stacked by ParamSpace.stack_candidates "
+                f"(an unbatched dynamic_params() pytree, or a DAG without "
+                f"dynamic params, has no population axis)")
+        return dynb, sizes.pop()
+
     # -- public API ----------------------------------------------------------
 
     def run(self, executable: Any, *args,
@@ -272,6 +331,36 @@ class Stack(abc.ABC):
         wall = time.perf_counter() - t0
         return RunReport(stack=self.name, wall_s=wall, io_bytes=io_bytes,
                          result=result, batch=batch,
+                         result_bytes=_tree_bytes(result))
+
+    def run_population(self, executable: Any, candidates: Any, *,
+                       rng: Optional[jax.Array] = None,
+                       space: Any = None) -> RunReport:
+        """Evaluate a *population* of dynamic-param candidates of one DAG
+        structure in a single compiled call (the batched-autotuning axis).
+
+        ``candidates`` is either a ``(n, len(space))`` matrix from
+        ``ParamSpace.sample``/``sample_dynamic`` (``space`` optional — built
+        from the DAG when omitted) or an already-stacked dyn pytree from
+        ``ParamSpace.stack_candidates``.  All candidates share the rng and
+        the compiled executable — one compile per (structure, population
+        size), zero retraces per candidate — and the candidate axis shards
+        over the stack's device mesh where the execution model has one.
+        ``result`` holds the per-candidate output stacked on axis 0.
+        """
+        dag = _extract_dag(executable)
+        if dag is None:
+            raise TypeError(
+                f"run_population needs a DAG executable (ProxyDAG / "
+                f"ProxyBenchmark / ProxySpec), got "
+                f"{type(executable).__name__}")
+        dynb, n = self._coerce_population(dag, candidates, space)
+        t0 = time.perf_counter()
+        result, io_bytes = self._dag_run_population(
+            dag, _default_rng(rng), dynb, n)
+        wall = time.perf_counter() - t0
+        return RunReport(stack=self.name, wall_s=wall, io_bytes=io_bytes,
+                         result=result, batch=n,
                          result_bytes=_tree_bytes(result))
 
     def _execute_batch(self, fn: Callable, rngs: jax.Array
@@ -377,6 +466,25 @@ class MPIStack(Stack):
                 return spmd(rng, dyn)
         return jax.jit(f, donate_argnums=_donate_argnums())
 
+    def _wrap_population(self, dag, n):
+        """Shard the candidate axis over the ranks: each rank vmaps its
+        own slice of the population (SPMD tuner sweep — ROADMAP's
+        multi-device dynamic-param batch)."""
+        from ..distributed.sharding import candidate_spec_axis
+        if _shard_map is None or candidate_spec_axis(
+                self.mesh, n, prefer=(self.axis,)) is None:
+            return super()._wrap_population(dag, n)  # pragma: no cover
+        pop = dag.build_population()
+
+        def f(rng, dynb):
+            CACHE_STATS["traces"] += 1
+            return _shard_map(pop, mesh=self.mesh,
+                              in_specs=(P(), P(self.axis)),
+                              out_specs=P(self.axis),
+                              check_rep=False)(rng, dynb)
+
+        return jax.jit(f)
+
 
 class SparkStack(Stack):
     """Global-view jit with input sharding constraints; intermediates stay
@@ -429,6 +537,20 @@ class SparkStack(Stack):
             jax.block_until_ready(out)
         return out, 0.0
 
+    def _dag_run_population(self, dag, rng, dynb, n):
+        from ..distributed.sharding import population_shardings
+        fn = self._compiled_dag_population(dag, n)
+        with self.mesh:
+            # shard the candidate axis over the workers: each worker
+            # evaluates its partition of the tuner population
+            dynb = jax.device_put(
+                dynb, population_shardings(self.mesh, dynb,
+                                           prefer=(self.axis,)))
+            rng = jax.device_put(rng, NamedSharding(self.mesh, P()))
+            out = fn(rng, dynb)
+            jax.block_until_ready(out)
+        return out, 0.0
+
 
 class HadoopStack(Stack):
     """Staged map -> host-materialized intermediate ("HDFS spill") ->
@@ -455,6 +577,48 @@ class HadoopStack(Stack):
 
     def _dag_run_batch(self, dag, rngs):
         return self._run_stages(dag, rngs, vmap=True)
+
+    def _dag_run_population(self, dag, rng, dynb, n):
+        """Staged population sweep: every candidate's intermediates spill
+        through host memory per stage (the population multiplies the
+        "HDFS" traffic), while each stage executes all candidates in one
+        vmapped call over the candidate axis.  Sources are generated once
+        and shared — candidates differ only in dynamic params, so source
+        nodes stay unbatched until an edge first writes a node."""
+        init, stages, finalize = dag.build_stages_parametric()
+        skey = dag.structure_key()
+        src_key = tuple(sorted(dag.sources.items()))
+        jinit = self._cached_stage(("init", False, src_key), lambda: init)
+        io_bytes = 0.0
+        nodes: Dict[str, np.ndarray] = {}
+        batched: Dict[str, bool] = {}
+        for k, v in jinit(rng).items():              # shared "HDFS read"
+            host = np.asarray(v)
+            io_bytes += host.nbytes
+            nodes[k] = host
+        for si, (srcs, dst, stage, stage_key) in enumerate(stages):
+            xs = [jnp.asarray(nodes[s]) for s in srcs]
+            x_axes = [0 if batched.get(s) else None for s in srcs]
+            prev = jnp.asarray(nodes[dst]) if dst in nodes else None
+            prev_ax = 0 if batched.get(dst) else None
+            sfn = self._cached_stage(
+                ("pstage", n, tuple(x_axes), prev is None, prev_ax,
+                 stage_key),
+                lambda s=stage, xa=tuple(x_axes), hp=prev is None,
+                pa=prev_ax: jax.vmap(
+                    s, in_axes=(None, list(xa), None if hp else pa, 0)))
+            out = sfn(rng, xs, prev, dynb[si])
+            host = np.asarray(out)                   # per-candidate spill
+            io_bytes += host.nbytes * 2.0            # write + read back
+            nodes[dst] = host
+            batched[dst] = True
+        fin_axes = {k: 0 if batched.get(k) else None for k in nodes}
+        jfin = self._cached_stage(
+            ("pfinalize", n, tuple(sorted(fin_axes.items())), skey),
+            lambda ax=fin_axes: jax.vmap(finalize, in_axes=(ax,)))
+        result = jfin({k: jnp.asarray(v) for k, v in nodes.items()})
+        jax.block_until_ready(result)
+        return result, io_bytes
 
     def _cached_stage(self, key: Tuple, make: Callable) -> Callable:
         cache = self.__dict__.setdefault("_stage_cache", {})

@@ -1,7 +1,8 @@
 # The paper's primary contribution: the dwarf-based scalable benchmarking
 # methodology — eight dwarf components, DAG-like proxy benchmarks, the
 # profiler (HLO metric vector) and the auto-tuning tool.
-from .autotune import AutoTuner, TuneResult, autotune
+from .autotune import (AutoTuner, PopulationTuner, PopulationTuneResult,
+                       TuneResult, autotune, population_tune)
 from .dag import Edge, ProxyDAG
 from .dwarfs import DWARFS, ComponentParams, get_component
 from .metrics import (HW_V5E, CostReport, HardwareSpec, Roofline,
@@ -11,7 +12,8 @@ from .profiler import WorkloadProfile, characterize, decompose_to_dwarfs
 from .proxy import ProxyBenchmark, proxy_from_dwarf_weights
 
 __all__ = [
-    "AutoTuner", "TuneResult", "autotune", "Edge", "ProxyDAG", "DWARFS",
+    "AutoTuner", "PopulationTuner", "PopulationTuneResult", "TuneResult",
+    "autotune", "population_tune", "Edge", "ProxyDAG", "DWARFS",
     "ComponentParams", "get_component", "HW_V5E", "CostReport",
     "HardwareSpec", "Roofline", "analyze_hlo_text", "eq1_accuracy",
     "metric_vector", "roofline_from_report", "vector_accuracy",

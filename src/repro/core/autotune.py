@@ -269,3 +269,216 @@ class AutoTuner:
 def autotune(proxy: ProxyBenchmark, target_metrics: Dict[str, float],
              **kw) -> TuneResult:
     return AutoTuner(target_metrics, **kw).tune(proxy)
+
+
+# ---------------------------------------------------------------------------
+# Population-based tuning (batched autotuning over the dynamic-param axis)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Generation:
+    """One population-tuner generation's summary."""
+
+    index: int
+    best_accuracy: float          # weighted avg accuracy of the elite
+    mean_accuracy: float          # population mean (search health signal)
+    best_deviation: float         # worst |deviation| of the elite
+    candidates: int               # candidates scored this generation
+
+
+@dataclasses.dataclass
+class PopulationTuneResult:
+    proxy: ProxyBenchmark
+    converged: bool
+    generations: int
+    candidates_evaluated: int
+    initial_accuracy: Dict[str, float]
+    final_accuracy: Dict[str, float]
+    final_deviation: float        # worst |deviation| of the returned proxy
+    history: List[Generation]
+
+    def summary(self) -> str:
+        rows = [f"population_tune[{self.proxy.name}]: "
+                f"converged={self.converged} gens={self.generations} "
+                f"candidates={self.candidates_evaluated} "
+                f"avg_acc {self.initial_accuracy.get('avg', 0):.3f} -> "
+                f"{self.final_accuracy.get('avg', 0):.3f} "
+                f"worst_dev {self.final_deviation:+.3f}"]
+        for g in self.history:
+            rows.append(f"  gen{g.index:02d} best_acc={g.best_accuracy:.3f} "
+                        f"mean_acc={g.mean_accuracy:.3f} "
+                        f"worst_dev={g.best_deviation:+.3f}")
+        return "\n".join(rows)
+
+
+class PopulationTuner:
+    """Gradient-free population tuner over a proxy's *dynamic* parameters
+    (weights + shape-free extras) — the batched-autotuning counterpart of
+    the greedy one-parameter-at-a-time :class:`AutoTuner`.
+
+    Each generation scores a whole candidate batch through the
+    compile-once machinery, so tuner throughput no longer pays per
+    candidate:
+
+    * **metrics** come from :class:`repro.core.engine.PopulationScorer` —
+      the compositional cost model assembled as one numpy matrix product
+      over the population (zero executable traces, zero compiles beyond
+      what measuring one candidate costs);
+    * **outputs** come from one vmapped executable call
+      (``Stack.run_population``), used to reject candidates whose
+      parameters drive the proxy non-finite — one compile per (structure,
+      population size), shared across all generations, candidate axis
+      sharded over the stack's mesh.
+
+    The search is random-search seeded (generation 0 is a log-uniform
+    ``ParamSpace.sample_dynamic``) followed by a simple evolution strategy
+    (CMA-ES style diagonal model): each later generation draws log-normal
+    candidates around the elite mean with per-leaf elite sigma, keeps the
+    best candidate unchanged (elitism), and re-injects a fresh random
+    fraction against premature collapse.  Deterministic for a fixed seed.
+    """
+
+    def __init__(self, target_metrics: Dict[str, float],
+                 metric_keys: Sequence[str] = DEFAULT_METRICS,
+                 tol: float = 0.15,
+                 population: int = 16,
+                 generations: int = 8,
+                 max_candidates: Optional[int] = None,
+                 elite_frac: float = 0.25,
+                 explore_frac: float = 0.125,
+                 sigma_floor: float = 0.05,
+                 seed: int = 0,
+                 stack: str = "openmp",
+                 execute: bool = True,
+                 weights: Optional[Dict[str, float]] = None):
+        self.target = target_metrics
+        self.keys = [k for k in metric_keys
+                     if abs(target_metrics.get(k, 0.0)) > 1e-12]
+        self.tol = tol
+        self.population = max(2, int(population))
+        self.generations = max(1, int(generations))
+        self.max_candidates = max_candidates
+        self.elite = max(1, int(round(elite_frac * self.population)))
+        self.explore = max(1, int(round(explore_frac * self.population)))
+        self.sigma_floor = sigma_floor
+        self.seed = seed
+        self.stack = stack
+        self.execute = execute
+        self.weights = dict(DEFAULT_WEIGHTS) if weights is None else weights
+        self.candidates_evaluated = 0
+
+    # -- scoring --------------------------------------------------------------
+
+    def _accuracies(self, metrics: Sequence[Dict[str, float]]) -> np.ndarray:
+        return np.array([vector_accuracy(self.target, m, self.keys,
+                                         self.weights)["avg"]
+                         for m in metrics])
+
+    def _worst_dev(self, metrics: Dict[str, float]) -> float:
+        devs = _deviations(self.target, metrics, self.keys)
+        return max((abs(d) for d in devs.values()), default=math.inf)
+
+    def _finite_mask(self, proxy: ProxyBenchmark,
+                     matrix: np.ndarray) -> np.ndarray:
+        """One vmapped executable call over the whole population; rejects
+        candidates whose dynamic params drive the proxy non-finite."""
+        from ..api.stack import get_stack
+        report = get_stack(self.stack).run_population(
+            proxy, matrix, space=self._space)
+        return np.isfinite(np.asarray(report.result, np.float64))
+
+    # -- sampling -------------------------------------------------------------
+
+    def _evolve(self, matrix: np.ndarray, acc: np.ndarray,
+                gen: int) -> np.ndarray:
+        """Next generation: log-normal around the elite mean (diagonal
+        sigma), elitism for the single best, fresh log-uniform samples for
+        the explore slots."""
+        space, dyn = self._space, self._dyn_mask
+        rs = np.random.RandomState(self.seed + 1000 * (gen + 1))
+        order = np.argsort(-acc)
+        elite = matrix[order[: self.elite]][:, dyn]
+        log_e = np.log(np.maximum(elite, 1e-3))
+        mu = log_e.mean(axis=0)
+        sigma = np.maximum(log_e.std(axis=0), self.sigma_floor)
+        n = self.population
+        drawn = np.exp(mu + sigma * rs.standard_normal((n, mu.size)))
+        out = np.tile(self._base, (n, 1))
+        out[:, dyn] = drawn
+        out[: self.explore, dyn] = space.sample(
+            self.explore, seed=self.seed + 7777 * (gen + 1))[:, dyn]
+        out[-1] = matrix[order[0]]                    # elitism
+        # clamp only the dynamic columns: static leaves must stay exactly
+        # at base (they define the shared structure and may legitimately
+        # sit outside the nominal bounds)
+        out[:, dyn] = space.clamp(out)[:, dyn]
+        return out
+
+    # -- main loop ------------------------------------------------------------
+
+    def tune(self, proxy: ProxyBenchmark) -> PopulationTuneResult:
+        from ..api.params import ParamSpace
+        from .engine import PopulationScorer, measure
+
+        proxy = proxy.clone()
+        self.candidates_evaluated = 0      # budget is per tune() call
+        space = self._space = ParamSpace.from_dag(proxy.dag)
+        self._dyn_mask = space.dynamic_mask()
+        self._base = space.values(proxy.dag)
+        init_metrics = measure(proxy.dag)
+        init_acc = vector_accuracy(self.target, init_metrics, self.keys,
+                                   self.weights)
+        if not self._dyn_mask.any():
+            return PopulationTuneResult(
+                proxy, False, 0, 0, init_acc, init_acc,
+                self._worst_dev(init_metrics), [])
+
+        scorer = PopulationScorer(proxy.dag, space)
+        matrix = space.sample_dynamic(self.population, self._base,
+                                      seed=self.seed)
+        matrix[-1] = self._base       # the un-tuned start competes too
+        best_vec, best_acc = self._base.copy(), init_acc["avg"]
+        best_metrics = init_metrics
+        history: List[Generation] = []
+        converged = False
+        gen = 0
+        for gen in range(1, self.generations + 1):
+            budget_left = (None if self.max_candidates is None
+                           else self.max_candidates
+                           - self.candidates_evaluated)
+            if budget_left is not None and budget_left <= 0:
+                gen -= 1
+                break
+            if budget_left is not None and budget_left < matrix.shape[0]:
+                matrix = matrix[:budget_left]
+            metrics = scorer(matrix)
+            acc = self._accuracies(metrics)
+            self.candidates_evaluated += matrix.shape[0]
+            if self.execute:
+                acc = np.where(self._finite_mask(proxy, matrix), acc, -1.0)
+            bi = int(np.argmax(acc))
+            if acc[bi] > best_acc:
+                best_acc = float(acc[bi])
+                best_vec = matrix[bi].copy()
+                best_metrics = metrics[bi]
+            history.append(Generation(
+                index=gen, best_accuracy=float(acc[bi]),
+                mean_accuracy=float(acc.mean()),
+                best_deviation=self._worst_dev(best_metrics),
+                candidates=int(matrix.shape[0])))
+            if self._worst_dev(best_metrics) <= self.tol:
+                converged = True
+                break
+            matrix = self._evolve(matrix, acc, gen)
+        space.apply(proxy.dag, best_vec)
+        final_acc = vector_accuracy(self.target, best_metrics, self.keys,
+                                    self.weights)
+        return PopulationTuneResult(
+            proxy, converged, gen, self.candidates_evaluated,
+            init_acc, final_acc, self._worst_dev(best_metrics), history)
+
+
+def population_tune(proxy: ProxyBenchmark, target_metrics: Dict[str, float],
+                    **kw) -> PopulationTuneResult:
+    return PopulationTuner(target_metrics, **kw).tune(proxy)

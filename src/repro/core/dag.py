@@ -218,6 +218,21 @@ class ProxyDAG:
         compile-once/run-many execution form."""
         return self._build(parametric=True)
 
+    def build_population(self) -> Callable:
+        """Returns ``fn(rng, dyn_batched) -> (n,)`` evaluating a whole
+        *population* of dynamic-param candidates in one call:
+        ``dyn_batched`` is a :meth:`dynamic_params`-shaped pytree whose
+        leaves carry a leading candidate axis (see
+        ``ParamSpace.stack_candidates``), vmapped over so every candidate
+        shares the rng, the generated sources, and — once jitted — a
+        single compiled executable (zero retraces per candidate)."""
+        pfn = self.build_parametric()
+
+        def population(rng: jax.Array, dyn_batched) -> jnp.ndarray:
+            return jax.vmap(lambda dyn: pfn(rng, dyn))(dyn_batched)
+
+        return population
+
     def _build(self, parametric: bool) -> Callable:
         self.validate()
         edges = self._rounded_edges()

@@ -28,11 +28,13 @@ assert the no-retrace contract.
 
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .dag import _INT_DYNAMIC, ProxyDAG, _init_sources, _terminals
 from .dwarfs import get_component
@@ -171,6 +173,137 @@ def structural_report(dag: ProxyDAG) -> CostReport:
             total.add(_body_report(e), mult=w)
     total.add(_finalize_report(_sink_sizes(dag)))
     return total
+
+
+# ---------------------------------------------------------------------------
+# population measurement (vectorized compositional model)
+# ---------------------------------------------------------------------------
+
+#: the CostReport channels :func:`repro.core.metrics.metric_vector` reads,
+#: flattened so population reports assemble as numpy linear algebra
+_BASIS_FIELDS = ("flops", "vpu_ops", "bytes_accessed", "rng_elems",
+                 "sort_elems", "fft_elems", "gather_elems", "reduce_elems",
+                 "logic_elems", "compare_elems", "elementwise_elems")
+
+
+def _report_to_vec(rep: CostReport) -> np.ndarray:
+    return np.array([getattr(rep, f) for f in _BASIS_FIELDS]
+                    + [rep.total_collective_bytes], dtype=np.float64)
+
+
+def _vec_to_report(v: np.ndarray) -> CostReport:
+    rep = CostReport(**{f: float(v[i]) for i, f in enumerate(_BASIS_FIELDS)})
+    if v[-1]:
+        rep.collective_bytes["all"] = float(v[-1])
+    return rep
+
+
+def _edge_with_extras(e, fields: Tuple[str, ...], values: Tuple) -> Any:
+    work = dataclasses.replace(
+        e, params=e.params.replace(extra=dict(e.params.extra)))
+    for f, v in zip(fields, values):
+        work.params.extra[f] = v
+    return work
+
+
+class PopulationScorer:
+    """Precomputed flat-basis scorer for populations sharing one DAG
+    structure — the :class:`~repro.core.autotune.PopulationTuner` hot path.
+
+    Exploits the compositional model's linearity in the weights: at
+    construction each edge's single-repeat body report is fetched once
+    (per distinct dynamic-extra setting, lazily) and flattened to a
+    channel vector, so every subsequent ``score(matrix)`` assembles all
+    ``n`` candidates as
+
+        M = const + W @ B          (numpy, one row per candidate)
+
+    instead of ``n`` independent ``measure()`` walks.  Zero executable
+    traces ever; body compiles only for dynamic-extra values never
+    analyzed before (identical to what a single measurement at those
+    values costs).  Candidate rows must differ from the construction-time
+    parameters only in *dynamic* leaves — static leaves define the shared
+    structure; rebuild the scorer after a structural step.
+    """
+
+    def __init__(self, dag: ProxyDAG, space, host_bytes: float = 0.0):
+        self.host_bytes = host_bytes
+        self._n_leaves = len(space)
+        self._static = ~space.dynamic_mask()
+        self._static_vals = space.values(dag)[self._static]
+        self._static_names = [n for n, s in zip(space.names, self._static)
+                              if s]
+        const = _report_to_vec(
+            _sources_report(tuple(sorted(dag.sources.items()))))
+        const += _report_to_vec(_finalize_report(_sink_sizes(dag)))
+        self._const = const
+        # per edge: (weight column, dynamic-extra columns/fields, body
+        # vector for extra-free edges, lazy per-extra-value vector cache)
+        self._edges = []
+        for ei, e in enumerate(dag.edges):
+            prefix = f"e{ei}.{e.component}"
+            extra_fields = tuple(f for f in e.dynamic_fields()
+                                 if f != "weight")
+            self._edges.append({
+                "edge": e,
+                "w_idx": space.index_of(f"{prefix}.weight"),
+                "extra_fields": extra_fields,
+                "extra_idx": [space.index_of(f"{prefix}.{f}")
+                              for f in extra_fields],
+                "body": (None if extra_fields
+                         else _report_to_vec(_body_report(e))),
+                "by_extras": {},
+            })
+
+    def _body_vec(self, info: Dict, values: Tuple) -> np.ndarray:
+        vec = info["by_extras"].get(values)
+        if vec is None:
+            vec = _report_to_vec(_body_report(
+                _edge_with_extras(info["edge"], info["extra_fields"],
+                                  values)))
+            info["by_extras"][values] = vec
+        return vec
+
+    def score(self, matrix) -> List[Dict[str, float]]:
+        """Metric dicts (``measure(execute=False)``-identical keys) for
+        every row of a ``(n, len(space))`` candidate matrix."""
+        matrix = np.asarray(matrix, np.float64)
+        if matrix.ndim != 2 or matrix.shape[1] != self._n_leaves:
+            raise ValueError(f"expected a (n, {self._n_leaves}) candidate "
+                             f"matrix, got shape {matrix.shape}")
+        n = matrix.shape[0]
+        if n and (matrix[:, self._static] != self._static_vals).any():
+            bad = np.nonzero((matrix[:, self._static]
+                              != self._static_vals).any(axis=0))[0]
+            names = [self._static_names[b] for b in bad[:4]]
+            raise ValueError(
+                f"population rows change static leaves {names}; a "
+                f"population shares one structure — rebuild the scorer "
+                f"per structure instead")
+        total = np.tile(self._const, (n, 1))
+        for info in self._edges:
+            w_col = np.round(matrix[:, info["w_idx"]])
+            if info["body"] is not None:
+                total += np.outer(w_col, info["body"])
+                continue
+            # dynamic extras bake into the body HLO: one vector per
+            # distinct value tuple present in the population
+            vals = np.stack([matrix[:, i] for i in info["extra_idx"]], axis=1)
+            for row in np.unique(vals, axis=0):
+                mask = (vals == row).all(axis=1)
+                total[mask] += np.outer(
+                    w_col[mask], self._body_vec(info, tuple(row)))
+        return [metric_vector(_vec_to_report(total[i]),
+                              host_bytes=self.host_bytes) for i in range(n)]
+
+    __call__ = score
+
+
+def measure_population(dag: ProxyDAG, space, matrix,
+                       host_bytes: float = 0.0) -> List[Dict[str, float]]:
+    """One-shot :class:`PopulationScorer`: metric vectors for a whole
+    population of candidate vectors sharing ``dag``'s structure."""
+    return PopulationScorer(dag, space, host_bytes=host_bytes)(matrix)
 
 
 # ---------------------------------------------------------------------------

@@ -55,6 +55,47 @@ def batch_spec_axis(mesh: Mesh, batch: int):
     return None
 
 
+def candidate_spec_axis(mesh: Mesh, n: int,
+                        prefer: Tuple[str, ...] = ("pod", "data")):
+    """:func:`batch_spec_axis` analogue for a tuner-population axis.
+
+    A population of ``n`` dynamic-param candidates (the leading axis of a
+    stacked dyn pytree — ``ParamSpace.stack_candidates``) shards over the
+    data-parallel-ish axes of the mesh: candidates are independent, so the
+    candidate batch is embarrassingly parallel exactly like an rng batch.
+    ``prefer`` names the axes to try (a stack passes its own axis name,
+    e.g. ``("rank",)`` / ``("worker",)``); returns the axis (or axis
+    tuple) when ``n`` divides, else ``None`` (replicate).
+    """
+    axes = tuple(a for a in prefer if a in mesh.axis_names)
+    if not axes:
+        return None
+    full = int(np.prod([mesh_axis_size(mesh, a) for a in axes]))
+    if _div(n, full):
+        return axes if len(axes) > 1 else axes[0]
+    for a in axes:
+        if _div(n, mesh_axis_size(mesh, a)):
+            return a
+    return None
+
+
+def population_shardings(mesh: Mesh, dyn_batched: Any,
+                         prefer: Tuple[str, ...] = ("pod", "data")) -> Any:
+    """NamedSharding pytree for a stacked dynamic-param pytree: each
+    leaf's leading candidate axis shards over the mesh when divisible;
+    scalars and indivisible leaves replicate."""
+
+    def leaf(x):
+        shape = getattr(x, "shape", ())
+        ax = (candidate_spec_axis(mesh, int(shape[0]), prefer)
+              if len(shape) >= 1 else None)
+        if ax is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(ax, *([None] * (len(shape) - 1))))
+
+    return jax.tree.map(leaf, dyn_batched)
+
+
 # ---------------------------------------------------------------------------
 # Parameter specs
 # ---------------------------------------------------------------------------

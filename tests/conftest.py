@@ -7,6 +7,22 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax
 import pytest
 
+try:
+    from hypothesis import HealthCheck, settings
+
+    # "ci" (HYPOTHESIS_PROFILE=ci): more examples, fixed derandomized seed,
+    # no deadline — compile-heavy jax examples blow any wall-clock budget.
+    settings.register_profile(
+        "ci", max_examples=50, deadline=None, derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large])
+    settings.register_profile(
+        "dev", max_examples=10, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:  # pragma: no cover - hypothesis is a dev dependency
+    pass
+
 
 @pytest.fixture
 def rng():

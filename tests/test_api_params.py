@@ -109,6 +109,83 @@ def test_sample_stays_in_bounds():
     assert (cand <= space.upper() + 1e-9).all()
 
 
+# -- regression: integer rounding must never escape the leaf bounds ---------
+
+
+def _fractional_int_space():
+    # an integer leaf with fractional bounds: round-after-clamp used to
+    # push 8.0 -> clamp 7.5 -> round 8.0, outside the bounds again
+    from repro.api import ParamLeaf
+    return ParamSpace([
+        ParamLeaf("e0.x.weight", 0, "weight", 2.5, 7.5, True, dynamic=True),
+        ParamLeaf("e0.x.fraction", 0, "fraction", 0.05, 0.95, False),
+    ], dag_name="frac")
+
+
+def test_clamp_respects_bounds_for_integer_leaves_with_fractional_bounds():
+    space = _fractional_int_space()
+    got = space.clamp(np.array([[8.0, 2.0], [0.0, -1.0], [7.49, 0.5]]))
+    lo, hi = space.lower(), space.upper()
+    assert (got >= lo).all() and (got <= hi).all(), got
+    assert got[0, 0] == 7.0 and got[1, 0] == 3.0       # integral + inside
+    ints = [l.integer for l in space.leaves]
+    assert (got[:, ints] == np.round(got[:, ints])).all()
+
+
+def test_sample_respects_integer_bounds_and_roundtrips_without_drift():
+    dag = _dag()
+    space = ParamSpace.from_dag(dag)
+    cand = space.sample(32, seed=9)
+    assert (cand >= space.lower()).all() and (cand <= space.upper()).all()
+    ints = np.array([l.integer for l in space.leaves])
+    assert (cand[:, ints] == np.round(cand[:, ints])).all()
+    # apply -> values is drift-free: a sampled row IS the dag's new state
+    for row in cand[:4]:
+        space.apply(dag, row)
+        assert np.array_equal(space.values(dag), row)
+        # idempotent: re-clamping an applied row changes nothing
+        assert np.array_equal(space.clamp(row), row)
+
+
+def test_apply_clamps_integers_inside_fractional_bounds():
+    from repro.api import ParamLeaf
+    dag = _dag()
+    space = ParamSpace([ParamLeaf("e1.quick_sort.weight", 1, "weight",
+                                  2.5, 7.5, True, dynamic=True)])
+    space.apply(dag, [100.0])
+    assert dag.edges[1].params.weight == 7.0           # floor(7.5), not 8
+    space.apply(dag, [0.0])
+    assert dag.edges[1].params.weight == 3.0           # ceil(2.5), not 2
+
+
+def test_sample_is_deterministic_across_processes():
+    import subprocess
+    import sys
+
+    space = ParamSpace.from_dag(_dag())
+    local = space.sample(8, seed=1234)
+    code = (
+        "import numpy as np\n"
+        "from repro.api import ParamSpace\n"
+        "from repro.core.dag import Edge, ProxyDAG\n"
+        "from repro.core.dwarfs import ComponentParams\n"
+        "dag = ProxyDAG('x', {'src': 4096},\n"
+        "    [Edge('euclidean_distance', ['src'], 'a',\n"
+        "          ComponentParams(data_size=4096, chunk_size=64, weight=2,\n"
+        "                          extra={'centers': 8})),\n"
+        "     Edge('quick_sort', ['a'], 'out',\n"
+        "          ComponentParams(data_size=4096, chunk_size=256,\n"
+        "                          weight=1))], 'out')\n"
+        "print(repr(ParamSpace.from_dag(dag).sample(8, seed=1234)"
+        ".tobytes().hex()))\n"
+    )
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, check=True,
+                         env={**__import__('os').environ,
+                              "JAX_PLATFORMS": "cpu"})
+    assert out.stdout.strip() == repr(local.tobytes().hex())
+
+
 def test_legacy_param_space_shim_matches():
     dag = _dag()
     space = ParamSpace.from_dag(dag)

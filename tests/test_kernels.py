@@ -1,14 +1,32 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode).
+
+Two layers of parity:
+
+* raw kernels (``flash_attention`` / ``matmul``) against their references;
+* the **backend-dispatch surface** — every op an edge can route through
+  ``kernels.dispatch`` (``topk``, ``hash_mix``, and each
+  ``pallas_capable`` dwarf component) — swept pallas-interpret vs the
+  stock XLA lowering across shapes and dtypes.  The dispatched ops must
+  be *bit-identical*: a tuner switching backend mid-sweep may never see
+  the proxy's output move.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.dwarfs import ComponentParams, get_component
+from repro.core.dwarfs.base import REGISTRY
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.hash_mix import hash_mix, hash_mix_ref
 from repro.kernels.matmul import matmul, matmul_ref
 from repro.kernels.topk import topk, topk_ref
+
+#: every component the dispatch layer can route to a Pallas fast path —
+#: discovered from the registry so a newly dispatched edge joins the sweep
+DISPATCHED_COMPONENTS = sorted(n for n, c in REGISTRY.items()
+                               if c.pallas_capable)
 
 
 @pytest.mark.parametrize("B,Sq,Skv,H,Kv,hd,causal", [
@@ -48,21 +66,49 @@ def test_matmul_matches_ref(M, K, N, dtype, rng):
                                rtol=tol, atol=tol * K)
 
 
+# ---------------------------------------------------------------------------
+# backend-dispatch parity sweep: pallas-interpret vs XLA, bit-identical
+# ---------------------------------------------------------------------------
+
+
 @pytest.mark.parametrize("M,N,k", [(64, 128, 8), (100, 40, 4), (256, 512, 1)])
-def test_topk_matches_ref(M, N, k, rng):
-    x = jax.random.normal(rng, (M, N), jnp.float32)
-    v1, i1 = topk(x, k, block_m=64)
-    v2, i2 = topk_ref(x, k)
-    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_parity_pallas_vs_xla(M, N, k, dtype, rng):
+    x = jax.random.normal(rng, (M, N), dtype)
+    v1, i1 = topk(x, k, block_m=64, interpret=True)   # pallas (interpret)
+    v2, i2 = topk_ref(x, k)                           # XLA lax.top_k
+    assert (np.asarray(v1, np.float32) == np.asarray(v2, np.float32)).all()
     assert (np.asarray(i1) == np.asarray(i2)).all()
 
 
-@pytest.mark.parametrize("n,rounds", [(1000, 1), (4096, 3), (33, 2)])
-def test_hash_mix_matches_ref(n, rounds, rng):
-    u = jax.random.bits(rng, (n,), jnp.uint32)
-    a = hash_mix(u, rounds=rounds)
-    b = hash_mix_ref(u, rounds)
+@pytest.mark.parametrize("shape", [(1000,), (4096,), (33,)])
+@pytest.mark.parametrize("rounds", [1, 3])
+def test_hash_mix_parity_pallas_vs_xla(shape, rounds, rng):
+    u = jax.random.bits(rng, shape, jnp.uint32)
+    a = hash_mix(u, rounds=rounds, interpret=True)    # pallas (interpret)
+    b = hash_mix_ref(u, rounds)                       # XLA fori_loop
     assert (np.asarray(a) == np.asarray(b)).all()
+
+
+@pytest.mark.parametrize("component", DISPATCHED_COMPONENTS)
+@pytest.mark.parametrize("size,chunk", [(1024, 64), (2000, 128), (4096, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dispatched_component_parity_pallas_vs_xla(component, size, chunk,
+                                                   dtype, rng):
+    """Every dwarf component with a Pallas fast path, executed through the
+    same ``kernels.dispatch`` route an edge takes, must be bit-identical
+    between backends (components cast to f32 internally, so bf16 inputs
+    exercise the cast path)."""
+    comp = get_component(component)
+    x = jax.random.normal(rng, (size,), dtype)
+    p = ComponentParams(data_size=size, chunk_size=chunk,
+                        extra={"k": 8, "bins": 64, "groups": 32, "rounds": 2,
+                               "mix_rounds": 2})
+    a = comp(x, p.replace(extra={**p.extra, "backend": "xla"}), rng)
+    b = comp(x, p.replace(extra={**p.extra, "backend": "pallas"}), rng)
+    assert a.dtype == b.dtype
+    assert (np.asarray(a, np.float32) == np.asarray(b, np.float32)).all(), \
+        component
 
 
 def test_flash_attention_decode_shape(rng):
