@@ -5,6 +5,11 @@ whole-program lower+compile per tuner measurement).
 
 Emits ``BENCH_engine.json`` at the repo root so future PRs have a perf
 trajectory to regress against; also prints the harness CSV rows.
+
+Perf gate: the run **fails (non-zero exit)** when the compile-once
+contract regresses — ``population_retraces > 0`` — or when bucketed
+population execution loses to the sequential per-candidate loop
+(``exec_speedup_x < 1``); CI's smoke step keys off the exit code.
 """
 
 from __future__ import annotations
@@ -20,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import ParamSpace, ProxySpec, cache_stats, get_stack
-from repro.core import engine
+from repro.core import engine, schedule
 from repro.core.autotune import AutoTuner, PopulationTuner
 from repro.core.dag import (_accumulate, _gather_inputs, _init_sources,
                             _terminals)
@@ -39,6 +44,7 @@ SWEEP_WEIGHTS = (1, 2, 4, 8, 16, 32, 64)
 TUNE_ITERS = int(os.environ.get("REPRO_BENCH_TUNE_ITERS", "6"))
 N_POP = int(os.environ.get("REPRO_BENCH_POPULATION", "16"))
 POP_STEPS = int(os.environ.get("REPRO_BENCH_POP_STEPS", "4"))
+EXEC_REPS = int(os.environ.get("REPRO_BENCH_EXEC_REPS", "2"))
 
 
 def _reference_proxy():
@@ -178,8 +184,13 @@ def bench_population_sweep() -> Dict[str, float]:
     proxy = _reference_proxy()
     space = ParamSpace.from_dag(proxy.dag)
     base = space.values(proxy.dag)
-    mats = [_tuner_generation_candidates(space, base, s)
-            for s in range(POP_STEPS)]
+    # a faithful tuner sweep: generation 0 is the log-uniform random-search
+    # seed (PopulationTuner's actual first draw — the straggler-heavy batch
+    # the bucket schedule exists for), later generations are evolution-step
+    # jitter around the current point
+    mats = [space.sample_dynamic(N_POP, base, seed=0)] + \
+        [_tuner_generation_candidates(space, base, s)
+         for s in range(1, POP_STEPS)]
 
     # executable accounting on *cold* per-instance caches: how many
     # compiles does one candidate cost vs a 16-candidate population?
@@ -205,15 +216,44 @@ def bench_population_sweep() -> Dict[str, float]:
         scorer(m)
     eval_pop_s = time.perf_counter() - t
 
-    # vmapped execution sweep (one compiled call per candidate batch)
-    t = time.perf_counter()
-    for m in mats:
-        stack.run_population(proxy, m, space=space)
-    exec_pop_s = time.perf_counter() - t
+    def _exec_pop() -> float:
+        # bucketed execution sweep (one call per weight stratum; every
+        # bucket reuses the single (plan, bucket_size) executable)
+        t = time.perf_counter()
+        for m in mats:
+            stack.run_population(proxy, m, space=space)
+        return time.perf_counter() - t
+
+    def _exec_seq() -> float:
+        # the pre-PR per-candidate evaluation loop
+        t = time.perf_counter()
+        for m in mats:
+            for row in m:
+                trial = proxy.clone()
+                space.apply(trial.dag, row)
+                stack.run(trial, rng=rng)
+        return time.perf_counter() - t
+
+    # interleave the passes so machine drift hits both paths alike and
+    # take the least-noise (min) time of each — the gate compares medians
+    # of a 2-core shared box otherwise
+    pop_times, seq_times = [], []
+    for _ in range(max(EXEC_REPS, 1)):
+        pop_times.append(_exec_pop())
+        seq_times.append(_exec_seq())
+    exec_pop_s, exec_seq_s = min(pop_times), min(seq_times)
     pop_retraces = cache_stats()["traces"] - t0
     pop_engine_traces = engine.stats()["traces"] - e0["traces"]
 
-    # sequential baseline: the pre-PR per-candidate evaluation loop
+    # the pre-plan vmapped path for reference: one whole-population batch,
+    # so every candidate pays the population-wide max trip count
+    stack.run_population(proxy, mats[0], space=space, bucket_size=N_POP)
+    t = time.perf_counter()
+    for m in mats:
+        stack.run_population(proxy, m, space=space, bucket_size=N_POP)
+    exec_single_batch_s = time.perf_counter() - t
+
+    # sequential scoring baseline (the pre-PR per-candidate measure loop)
     t = time.perf_counter()
     for m in mats:
         for row in m:
@@ -221,13 +261,6 @@ def bench_population_sweep() -> Dict[str, float]:
             space.apply(trial.dag, row)
             engine.measure(trial.dag)
     eval_seq_s = time.perf_counter() - t
-    t = time.perf_counter()
-    for m in mats:
-        for row in m:
-            trial = proxy.clone()
-            space.apply(trial.dag, row)
-            stack.run(trial, rng=rng)
-    exec_seq_s = time.perf_counter() - t
 
     # population-tuner smoke: a real (tiny) tuning run end to end
     target = engine.measure(_reference_proxy().dag)
@@ -246,11 +279,15 @@ def bench_population_sweep() -> Dict[str, float]:
         "eval_population_s": eval_pop_s,
         "eval_sequential_s": eval_seq_s,
         "speedup_x": eval_seq_s / max(eval_pop_s, 1e-9),
-        # vmapped execution: one compiled call per batch (CPU wall-clock is
-        # max-over-candidates bound; the candidate axis shards on a mesh)
+        # bucketed execution: per-bucket trip bounds recover the
+        # sequential-sum cost model (the candidate axis still shards on a
+        # mesh); exec_single_batch_s is the old whole-population vmapped
+        # path whose wall-clock was max-over-candidates bound
         "exec_population_s": exec_pop_s,
         "exec_sequential_s": exec_seq_s,
         "exec_speedup_x": exec_seq_s / max(exec_pop_s, 1e-9),
+        "exec_single_batch_s": exec_single_batch_s,
+        "bucket_speedup_x": exec_single_batch_s / max(exec_pop_s, 1e-9),
         # compile-once contract
         "executables_single_candidate": single_compiles,
         "executables_16_candidates": population_compiles,
@@ -263,11 +300,55 @@ def bench_population_sweep() -> Dict[str, float]:
     }
 
 
+def bench_plan_sweep() -> Dict[str, object]:
+    """ExecutionPlan lowering diagnostics: how many edges fuse per Table-3
+    proxy at the live ``REPRO_FUSION_THRESHOLD``, plus the weight-bucket
+    schedule of a tuner-generation candidate batch on the reference proxy
+    — the per-bucket trip bounds that replace the population-wide max."""
+    proxies = {}
+    for name in sorted(PROXY_SPECS):
+        dag = ProxySpec.from_json(PROXY_SPECS[name]).to_benchmark().dag
+        rep = schedule.lower(dag).report()
+        proxies[name] = {"edges": rep["edges"], "stages": rep["stages"],
+                         "fused_stages": rep["fused_stages"]}
+    proxy = _reference_proxy()
+    space = ParamSpace.from_dag(proxy.dag)
+    mat = space.sample_dynamic(N_POP, space.values(proxy.dag), seed=0)
+    plan = schedule.lower(proxy.dag)
+    sched = plan.bucket_schedule(
+        space.stack_candidates(proxy.dag, mat))
+    return {
+        "fusion_threshold": schedule.fusion_threshold(),
+        "reference_partition": plan.report()["partition"],
+        "fused_stage_counts": proxies,
+        "population": N_POP,
+        "bucket_signature": list(sched.signature),
+        "bucket_trip_bounds": sched.trip_bounds(),
+        "bucket_valid_counts": [b.valid for b in sched.buckets],
+        "bucket_masses": [float(m) for m in sched.bucket_masses()],
+        "single_batch_trip_bound": max(sched.trip_bounds() or [0]),
+    }
+
+
+class BenchGateError(RuntimeError):
+    """A perf-contract regression the harness must not let rot silently."""
+
+
 def bench_compile_vs_run() -> List[str]:
     run_path = bench_engine_run_path()
     sweep = bench_weight_sweep()
     tune = bench_autotune_sweep()
     population = bench_population_sweep()
+    plan_sweep = bench_plan_sweep()
+    failures = []
+    if population["population_retraces"] > 0:
+        failures.append(
+            f"population_retraces={population['population_retraces']:.0f} "
+            f"(compile-once contract broken)")
+    if population["exec_speedup_x"] < 1.0:
+        failures.append(
+            f"exec_speedup_x={population['exec_speedup_x']:.2f} < 1.0 "
+            f"(bucketed population execution lost to the sequential loop)")
     payload = {
         "jax_version": jax.__version__,
         "platform": jax.default_backend(),
@@ -276,10 +357,21 @@ def bench_compile_vs_run() -> List[str]:
         "weight_sweep": sweep,
         "autotune_sweep": tune,
         "population_sweep": population,
+        "plan_sweep": plan_sweep,
+        "gate_failures": failures,
         "engine_stats": engine.stats(),
         "stack_cache_stats": cache_stats(),
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=1) + "\n")
+    rows = _csv_rows(run_path, sweep, tune, population, plan_sweep)
+    if failures:
+        for row in rows:           # the evidence still lands on failure
+            print(row, flush=True)
+        raise BenchGateError("; ".join(failures))
+    return rows
+
+
+def _csv_rows(run_path, sweep, tune, population, plan_sweep) -> List[str]:
     return [
         csv_row("engine/run_path", run_path["steady_state_s"] * 1e6,
                 f"first_s={run_path['first_call_s']:.3f};"
@@ -298,9 +390,16 @@ def bench_compile_vs_run() -> List[str]:
         csv_row("engine/population_sweep", population["eval_population_s"] * 1e6,
                 f"eval_speedup={population['speedup_x']:.1f}x;"
                 f"exec_speedup={population['exec_speedup_x']:.1f}x;"
+                f"bucket_speedup={population['bucket_speedup_x']:.1f}x;"
                 f"retraces={population['population_retraces']:.0f};"
                 f"executables_16={population['executables_16_candidates']:.0f};"
                 f"tuner_smoke_s={population['tuner_smoke_s']:.2f}"),
+        csv_row("engine/plan_sweep", 0.0,
+                f"threshold={plan_sweep['fusion_threshold']:g};"
+                f"ref_stages={len(plan_sweep['reference_partition'])};"
+                f"buckets={plan_sweep['bucket_signature']};"
+                f"trip_bounds={plan_sweep['bucket_trip_bounds']};"
+                f"single_batch_trips={plan_sweep['single_batch_trip_bound']}"),
     ]
 
 

@@ -6,8 +6,10 @@ Three public surfaces, one contract:
   executes any proxy DAG, workload, or raw fn on any software stack
   (openmp / mpi / spark / hadoop) and returns a uniform :class:`RunReport`;
   ``run_batch`` vmaps over rng batches and ``run_population`` evaluates a
-  whole batch of dynamic-param candidates in one compiled call (the
-  batched-autotuning axis, candidate batch sharded over the stack's mesh).
+  whole batch of dynamic-param candidates through the ExecutionPlan's
+  weight-stratified bucket schedule (the batched-autotuning axis — one
+  shared executable per bucket size, buckets sharded over the stack's
+  mesh).
 * **Versioned ProxySpec** (:mod:`repro.api.spec`): declarative,
   schema-validated JSON specs with a full ``to_json``/``from_json``
   round-trip.

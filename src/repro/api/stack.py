@@ -43,6 +43,8 @@ try:  # jax>=0.4.30 experimental location; stubbed out if unavailable
 except ImportError:  # pragma: no cover - depends on container jax build
     _shard_map = None
 
+from ..core import schedule as plans
+from ..core.cachetools import cached_get
 from ..core.dag import ProxyDAG
 
 
@@ -50,11 +52,15 @@ from ..core.dag import ProxyDAG
 # Compiled-executable cache (compile-once/run-many)
 # ---------------------------------------------------------------------------
 #
-# DAG executables are compiled from their *parametric* form
-# (``ProxyDAG.build_parametric``): weights and shape-free extras enter as
-# jitted arguments, so one executable serves every dynamic-param setting of
-# a structure.  Each stack keeps its own cache (its execution model is part
-# of the compiled program) keyed on ``ProxyDAG.structure_key()``; these
+# DAG executables lower through ``repro.core.schedule.lower`` into an
+# ExecutionPlan and compile from the plan's *parametric* form: weights and
+# shape-free extras enter as jitted arguments, so one executable serves
+# every dynamic-param setting of a structure.  Each stack keeps its own
+# cache (its execution model is part of the compiled program) keyed on
+# ``ExecutionPlan.structure_key()`` — the DAG structure *plus* the fusion
+# partition, so a ``REPRO_FUSION_THRESHOLD`` change never hits an
+# executable compiled for another grouping; population executables add the
+# bucket size (``(plan.structure_key(), bucket_size)``).  These
 # module-level counters expose hit/miss/trace activity for the no-retrace
 # tests and the engine benchmarks.
 
@@ -73,11 +79,6 @@ def cache_stats() -> Dict[str, int]:
 def reset_cache_stats() -> None:
     for k in CACHE_STATS:
         CACHE_STATS[k] = 0
-
-
-def _evict_oldest(cache: Dict, cap: int = CACHE_CAP) -> None:
-    while len(cache) > cap:
-        cache.pop(next(iter(cache)))
 
 
 def _donate_argnums() -> Tuple[int, ...]:
@@ -163,6 +164,14 @@ def _default_rng(rng: Optional[jax.Array]) -> jax.Array:
     return jax.random.PRNGKey(0) if rng is None else rng
 
 
+def _take_candidates(dynb: Tuple, indices) -> Tuple:
+    """Gather one bucket's slice of a stacked dyn pytree (leading
+    candidate axis) — shapes depend only on the bucket size, so every
+    same-size bucket reuses one compiled executable."""
+    sel = jnp.asarray(np.asarray(indices), jnp.int32)
+    return jax.tree_util.tree_map(lambda v: v[sel], dynb)
+
+
 # ---------------------------------------------------------------------------
 # Stack protocol
 # ---------------------------------------------------------------------------
@@ -174,11 +183,16 @@ class Stack(abc.ABC):
     Subclasses implement ``_execute(fn, args) -> (result, io_bytes)`` for
     raw-fn/workload executables; coercion, timing, batching and reporting
     are shared.  DAG executables take the compile-once fast path instead:
+    they lower to an ``ExecutionPlan`` (``repro.core.schedule.lower`` —
+    fused stages under the live ``REPRO_FUSION_THRESHOLD``) and
     ``run``/``run_batch`` fetch a cached parametric executable via
-    ``_compiled_dag``, so a stack that needs its execution model applied to
-    DAG runs overrides ``_wrap_parametric`` (bake the model into the
+    ``_compiled_plan``, so a stack that needs its execution model applied
+    to DAG runs overrides ``_wrap_parametric`` (bake the model into the
     compiled fn — see ``MPIStack``) and/or ``_dag_run``/``_dag_run_batch``
-    (placement and io accounting — see ``SparkStack``/``HadoopStack``)."""
+    (placement and io accounting — see ``SparkStack``/``HadoopStack``).
+    ``run_population`` executes a plan's weight-stratified
+    ``BucketSchedule``: one vmapped call per bucket, every bucket sharing
+    the one ``(plan, bucket_size)`` executable."""
 
     name: str = "abstract"
 
@@ -187,23 +201,17 @@ class Stack(abc.ABC):
         """Run ``fn(*args)`` under this execution model.
         Returns ``(result, io_bytes)``."""
 
-    # -- compiled DAG executables -------------------------------------------
+    # -- compiled plan executables ------------------------------------------
 
-    def _compiled_dag(self, dag: ProxyDAG, batch: bool) -> Callable:
+    def _compiled_plan(self, plan, batch: bool) -> Callable:
         """Cached jitted ``fn(rng, dyn)`` for this stack's execution model.
-        One compile per (stack, structure key, batch-ness); every
+        One compile per (stack, plan structure key, batch-ness); every
         dynamic-param setting of the structure reuses it."""
         cache = self.__dict__.setdefault("_dag_cache", {})
-        key = (batch, dag.structure_key())
-        fn = cache.get(key)
-        if fn is None:
-            CACHE_STATS["misses"] += 1
-            fn = self._wrap_parametric(dag.build_parametric(), batch)
-            cache[key] = fn
-            _evict_oldest(cache)
-        else:
-            CACHE_STATS["hits"] += 1
-        return fn
+        return cached_get(
+            cache, (batch, plan.structure_key()),
+            lambda: self._wrap_parametric(plan.build_parametric(), batch),
+            CACHE_STATS, CACHE_CAP)
 
     def _wrap_parametric(self, pfn: Callable, batch: bool) -> Callable:
         """Bake this stack's execution model into a jitted parametric fn."""
@@ -218,40 +226,38 @@ class Stack(abc.ABC):
         return jax.jit(f, donate_argnums=_donate_argnums())
 
     def _dag_run(self, dag: ProxyDAG, rng: jax.Array) -> Tuple[Any, float]:
-        out = self._compiled_dag(dag, batch=False)(rng, dag.dynamic_params())
+        plan = plans.lower(dag)
+        out = self._compiled_plan(plan, batch=False)(rng,
+                                                     dag.dynamic_params())
         jax.block_until_ready(out)
         return out, 0.0
 
     def _dag_run_batch(self, dag: ProxyDAG, rngs: jax.Array
                        ) -> Tuple[Any, float]:
-        out = self._compiled_dag(dag, batch=True)(rngs, dag.dynamic_params())
+        plan = plans.lower(dag)
+        out = self._compiled_plan(plan, batch=True)(rngs,
+                                                    dag.dynamic_params())
         jax.block_until_ready(out)
         return out, 0.0
 
-    # -- population evaluation (one compiled call per candidate batch) -------
+    # -- population evaluation (one compiled call per weight bucket) ---------
 
-    def _compiled_dag_population(self, dag: ProxyDAG, n: int) -> Callable:
+    def _compiled_plan_population(self, plan, n: int) -> Callable:
         """Cached jitted ``fn(rng, dyn_batched)`` evaluating ``n``
-        dynamic-param candidates of one structure in a single call.  Keyed
-        on (structure key, population size): every candidate batch of the
-        same shape reuses it — zero retraces per candidate."""
+        dynamic-param candidates of one plan in a single vmapped call.
+        Keyed on ``(plan structure key, bucket size)``: every same-size
+        bucket of every sweep reuses it — at most one executable per
+        bucket signature, zero retraces per candidate."""
         cache = self.__dict__.setdefault("_dag_cache", {})
-        key = (("population", n), dag.structure_key())
-        fn = cache.get(key)
-        if fn is None:
-            CACHE_STATS["misses"] += 1
-            fn = self._wrap_population(dag, n)
-            cache[key] = fn
-            _evict_oldest(cache)
-        else:
-            CACHE_STATS["hits"] += 1
-        return fn
+        return cached_get(
+            cache, (("population", n), plan.structure_key()),
+            lambda: self._wrap_population(plan, n), CACHE_STATS, CACHE_CAP)
 
-    def _wrap_population(self, dag: ProxyDAG, n: int) -> Callable:
+    def _wrap_population(self, plan, n: int) -> Callable:
         """Bake this stack's execution model into the canonical vmapped
-        population form (:meth:`ProxyDAG.build_population`).  No buffer
+        population form (``ExecutionPlan.build_population``).  No buffer
         donation: callers may reuse a stacked dyn pytree across calls."""
-        pop = dag.build_population()
+        pop = plan.build_population()
 
         def f(rng, dynb):
             CACHE_STATS["traces"] += 1
@@ -259,11 +265,75 @@ class Stack(abc.ABC):
 
         return jax.jit(f)
 
+    def _population_call(self, fn: Callable, rng: jax.Array,
+                         dynb: Tuple) -> Tuple[Any, float]:
+        """One bucket's executable call (placement hook — see SparkStack).
+        Deliberately *not* synced: the bucket loop dispatches every
+        stratum and lets the assembly's host transfer force completion,
+        overlapping per-bucket Python overhead with device compute."""
+        return fn(rng, dynb), 0.0
+
     def _dag_run_population(self, dag: ProxyDAG, rng: jax.Array,
-                            dynb: Tuple, n: int) -> Tuple[Any, float]:
-        out = self._compiled_dag_population(dag, n)(rng, dynb)
-        jax.block_until_ready(out)
-        return out, 0.0
+                            dynb: Tuple, n: int,
+                            bucket_size: Optional[int] = None
+                            ) -> Tuple[Any, float]:
+        """Bucketed population execution: candidates stratified by total
+        weighted cost run one vmapped call per bucket, so each bucket's
+        batched ``while`` trips only to its own maximum instead of the
+        population-wide straggler — recovering the sequential-sum cost
+        model while keeping per-lane results bit-identical (vmap lanes
+        are batch-composition independent).  Population plans lower
+        unfused (``plans.lower_population``): per-edge loops give the
+        schedule its per-edge trip bounds, and a fused switch under a
+        batched candidate axis would execute every branch per trip."""
+        plan = plans.lower_population(dag)
+        sched = plan.bucket_schedule(dynb, bucket_size)
+        if sched.bucket_size == 1:
+            # fully stratified schedule (the single-device default): every
+            # candidate runs exactly its own trips through an *unbatched*
+            # parametric executable (no batched-while masking overhead),
+            # strata dispatched over a small host thread pool — the CPU
+            # analogue of sharding the candidate axis over a mesh
+            fn = self._compiled_plan(plan, batch=False)
+            host_dynb = jax.tree_util.tree_map(np.asarray, dynb)
+
+            def one(i: int):
+                dyn_i = jax.tree_util.tree_map(
+                    lambda v: jnp.asarray(v[i]), host_dynb)
+                return self._population_call(fn, rng, dyn_i)
+
+            order = [int(b.indices[0]) for b in sched.buckets]
+            workers = plans.population_workers()
+            if (workers > 1 and len(order) > 1 and
+                    type(self)._population_call is Stack._population_call):
+                from concurrent.futures import ThreadPoolExecutor
+                with ThreadPoolExecutor(max_workers=workers) as pool:
+                    results = list(zip(order, pool.map(one, order)))
+            else:
+                results = [(i, one(i)) for i in order]
+            out_np = None
+            io_bytes = 0.0
+            for i, (res, io_b) in results:     # host transfer = the sync
+                io_bytes += io_b
+                host = np.asarray(res)
+                if out_np is None:
+                    out_np = np.empty((sched.n,) + host.shape, host.dtype)
+                out_np[i] = host
+            return jnp.asarray(out_np), io_bytes
+        fn = self._compiled_plan_population(plan, sched.bucket_size)
+        results, io_bytes = [], 0.0
+        for b in sched.buckets:
+            res, io_b = self._population_call(
+                fn, rng, _take_candidates(dynb, b.indices))
+            io_bytes += io_b
+            results.append((b, res))
+        out_np = None
+        for b, res in results:                 # host transfer = the sync
+            host = np.asarray(res)
+            if out_np is None:
+                out_np = np.empty((sched.n,) + host.shape[1:], host.dtype)
+            out_np[b.indices[:b.valid]] = host[:b.valid]
+        return jnp.asarray(out_np), io_bytes
 
     def _coerce_population(self, dag: ProxyDAG, candidates: Any,
                            space: Any) -> Tuple[Tuple, int]:
@@ -335,18 +405,23 @@ class Stack(abc.ABC):
 
     def run_population(self, executable: Any, candidates: Any, *,
                        rng: Optional[jax.Array] = None,
-                       space: Any = None) -> RunReport:
+                       space: Any = None,
+                       bucket_size: Optional[int] = None) -> RunReport:
         """Evaluate a *population* of dynamic-param candidates of one DAG
-        structure in a single compiled call (the batched-autotuning axis).
+        structure through its weight-stratified bucket schedule (the
+        batched-autotuning axis).
 
         ``candidates`` is either a ``(n, len(space))`` matrix from
         ``ParamSpace.sample``/``sample_dynamic`` (``space`` optional — built
         from the DAG when omitted) or an already-stacked dyn pytree from
-        ``ParamSpace.stack_candidates``.  All candidates share the rng and
-        the compiled executable — one compile per (structure, population
+        ``ParamSpace.stack_candidates``.  All candidates share the rng;
+        the plan's ``BucketSchedule`` strata (``bucket_size`` — default
+        ``ceil(n / REPRO_POP_BUCKETS)``) each execute as one vmapped call
+        of a single shared executable — one compile per (plan, bucket
         size), zero retraces per candidate — and the candidate axis shards
         over the stack's device mesh where the execution model has one.
-        ``result`` holds the per-candidate output stacked on axis 0.
+        ``result`` holds the per-candidate output stacked on axis 0 in the
+        caller's candidate order.
         """
         dag = _extract_dag(executable)
         if dag is None:
@@ -357,7 +432,7 @@ class Stack(abc.ABC):
         dynb, n = self._coerce_population(dag, candidates, space)
         t0 = time.perf_counter()
         result, io_bytes = self._dag_run_population(
-            dag, _default_rng(rng), dynb, n)
+            dag, _default_rng(rng), dynb, n, bucket_size=bucket_size)
         wall = time.perf_counter() - t0
         return RunReport(stack=self.name, wall_s=wall, io_bytes=io_bytes,
                          result=result, batch=n,
@@ -466,15 +541,15 @@ class MPIStack(Stack):
                 return spmd(rng, dyn)
         return jax.jit(f, donate_argnums=_donate_argnums())
 
-    def _wrap_population(self, dag, n):
-        """Shard the candidate axis over the ranks: each rank vmaps its
-        own slice of the population (SPMD tuner sweep — ROADMAP's
-        multi-device dynamic-param batch)."""
+    def _wrap_population(self, plan, n):
+        """Shard each bucket's candidate axis over the ranks: every rank
+        vmaps its own slice of the bucket (SPMD tuner sweep — ROADMAP's
+        multi-device dynamic-param batch, now at bucket granularity)."""
         from ..distributed.sharding import candidate_spec_axis
         if _shard_map is None or candidate_spec_axis(
                 self.mesh, n, prefer=(self.axis,)) is None:
-            return super()._wrap_population(dag, n)  # pragma: no cover
-        pop = dag.build_population()
+            return super()._wrap_population(plan, n)  # pragma: no cover
+        pop = plan.build_population()
 
         def f(rng, dynb):
             CACHE_STATS["traces"] += 1
@@ -520,7 +595,7 @@ class SparkStack(Stack):
         return out, 0.0
 
     def _dag_run(self, dag, rng):
-        fn = self._compiled_dag(dag, batch=False)
+        fn = self._compiled_plan(plans.lower(dag), batch=False)
         with self.mesh:
             rng = jax.device_put(rng, NamedSharding(self.mesh, P()))
             out = fn(rng, dag.dynamic_params())
@@ -528,7 +603,7 @@ class SparkStack(Stack):
         return out, 0.0
 
     def _dag_run_batch(self, dag, rngs):
-        fn = self._compiled_dag(dag, batch=True)
+        fn = self._compiled_plan(plans.lower(dag), batch=True)
         with self.mesh:
             # shard the rng batch over the workers (the "RDD partitions")
             rngs = jax.device_put(
@@ -537,18 +612,17 @@ class SparkStack(Stack):
             jax.block_until_ready(out)
         return out, 0.0
 
-    def _dag_run_population(self, dag, rng, dynb, n):
-        from ..distributed.sharding import population_shardings
-        fn = self._compiled_dag_population(dag, n)
+    def _population_call(self, fn, rng, dynb):
+        from ..distributed.sharding import bucket_shardings
         with self.mesh:
-            # shard the candidate axis over the workers: each worker
-            # evaluates its partition of the tuner population
+            # place each bucket over the workers: every worker evaluates
+            # its partition of the bucket's candidate slice (no sync —
+            # the assembly's host transfer forces completion)
             dynb = jax.device_put(
-                dynb, population_shardings(self.mesh, dynb,
-                                           prefer=(self.axis,)))
+                dynb, bucket_shardings(self.mesh, dynb,
+                                       prefer=(self.axis,)))
             rng = jax.device_put(rng, NamedSharding(self.mesh, P()))
             out = fn(rng, dynb)
-            jax.block_until_ready(out)
         return out, 0.0
 
 
@@ -578,74 +652,87 @@ class HadoopStack(Stack):
     def _dag_run_batch(self, dag, rngs):
         return self._run_stages(dag, rngs, vmap=True)
 
-    def _dag_run_population(self, dag, rng, dynb, n):
-        """Staged population sweep: every candidate's intermediates spill
-        through host memory per stage (the population multiplies the
-        "HDFS" traffic), while each stage executes all candidates in one
-        vmapped call over the candidate axis.  Sources are generated once
-        and shared — candidates differ only in dynamic params, so source
-        nodes stay unbatched until an edge first writes a node."""
-        init, stages, finalize = dag.build_stages_parametric()
-        skey = dag.structure_key()
-        src_key = tuple(sorted(dag.sources.items()))
+    def _dag_run_population(self, dag, rng, dynb, n, bucket_size=None):
+        """Staged population sweep over the plan's bucket schedule: every
+        candidate's intermediates spill through host memory per *fused
+        stage* (the population multiplies the "HDFS" traffic — at stage,
+        not edge, granularity), each bucket executing its stratum in one
+        vmapped call per stage so the staged trip bounds follow the
+        bucket's own maxima.  Sources are generated once and shared —
+        candidates differ only in dynamic params, so source nodes stay
+        unbatched until a stage first writes a node."""
+        plan = plans.lower(dag)
+        sched = plan.bucket_schedule(dynb, bucket_size)
+        nb = sched.bucket_size
+        init, stages, finalize = plan.stages_parametric()
+        pkey = plan.structure_key()
+        src_key = tuple(sorted(plan.sources.items()))
         jinit = self._cached_stage(("init", False, src_key), lambda: init)
         io_bytes = 0.0
-        nodes: Dict[str, np.ndarray] = {}
-        batched: Dict[str, bool] = {}
+        shared: Dict[str, np.ndarray] = {}
         for k, v in jinit(rng).items():              # shared "HDFS read"
             host = np.asarray(v)
             io_bytes += host.nbytes
-            nodes[k] = host
-        for si, (srcs, dst, stage, stage_key) in enumerate(stages):
-            xs = [jnp.asarray(nodes[s]) for s in srcs]
-            x_axes = [0 if batched.get(s) else None for s in srcs]
-            prev = jnp.asarray(nodes[dst]) if dst in nodes else None
-            prev_ax = 0 if batched.get(dst) else None
-            sfn = self._cached_stage(
-                ("pstage", n, tuple(x_axes), prev is None, prev_ax,
-                 stage_key),
-                lambda s=stage, xa=tuple(x_axes), hp=prev is None,
-                pa=prev_ax: jax.vmap(
-                    s, in_axes=(None, list(xa), None if hp else pa, 0)))
-            out = sfn(rng, xs, prev, dynb[si])
-            host = np.asarray(out)                   # per-candidate spill
-            io_bytes += host.nbytes * 2.0            # write + read back
-            nodes[dst] = host
-            batched[dst] = True
-        fin_axes = {k: 0 if batched.get(k) else None for k in nodes}
-        jfin = self._cached_stage(
-            ("pfinalize", n, tuple(sorted(fin_axes.items())), skey),
-            lambda ax=fin_axes: jax.vmap(finalize, in_axes=(ax,)))
-        result = jfin({k: jnp.asarray(v) for k, v in nodes.items()})
-        jax.block_until_ready(result)
-        return result, io_bytes
+            shared[k] = host
+        out_np: Optional[np.ndarray] = None
+        for b in sched.buckets:
+            sub = _take_candidates(dynb, b.indices)
+            stage_dyns = plan.stage_dyn_tuples(sub)
+            nodes: Dict[str, np.ndarray] = dict(shared)
+            batched: Dict[str, bool] = {}
+            for si, (srcs, dst, stage, stage_key) in enumerate(stages):
+                xs = [jnp.asarray(nodes[s]) for s in srcs]
+                x_axes = [0 if batched.get(s) else None for s in srcs]
+                prev = jnp.asarray(nodes[dst]) if dst in nodes else None
+                prev_ax = 0 if batched.get(dst) else None
+                sfn = self._cached_stage(
+                    ("pstage", nb, tuple(x_axes), prev is None, prev_ax,
+                     stage_key),
+                    lambda s=stage, xa=tuple(x_axes), hp=prev is None,
+                    pa=prev_ax: jax.vmap(
+                        s, in_axes=(None, list(xa), None if hp else pa, 0)))
+                out = sfn(rng, xs, prev, stage_dyns[si])
+                host = np.asarray(out)               # per-candidate spill
+                io_bytes += host.nbytes * 2.0        # write + read back
+                nodes[dst] = host
+                batched[dst] = True
+            fin_axes = {k: 0 if batched.get(k) else None for k in nodes}
+            jfin = self._cached_stage(
+                ("pfinalize", nb, tuple(sorted(fin_axes.items())), pkey),
+                lambda ax=fin_axes: jax.vmap(finalize, in_axes=(ax,)))
+            res = jfin({k: jnp.asarray(v) for k, v in nodes.items()})
+            jax.block_until_ready(res)
+            host = np.asarray(res)
+            if out_np is None:
+                out_np = np.empty((sched.n,) + host.shape[1:], host.dtype)
+            out_np[b.indices[:b.valid]] = host[:b.valid]
+        return jnp.asarray(out_np), io_bytes
 
     def _cached_stage(self, key: Tuple, make: Callable) -> Callable:
         cache = self.__dict__.setdefault("_stage_cache", {})
-        fn = cache.get(key)
-        if fn is None:
-            CACHE_STATS["misses"] += 1
 
+        def build() -> Callable:
             def counted(*args, _f=make()):
                 CACHE_STATS["traces"] += 1
                 return _f(*args)
 
-            fn = jax.jit(counted)
-            cache[key] = fn
-            _evict_oldest(cache)
-        else:
-            CACHE_STATS["hits"] += 1
-        return fn
+            return jax.jit(counted)
+
+        return cached_get(cache, key, build, CACHE_STATS, CACHE_CAP)
 
     def _run_stages(self, dag: ProxyDAG, rng: jax.Array, vmap: bool
                     ) -> Tuple[Any, float]:
-        """Edge-by-edge execution with host-spilled intermediates.  Each
-        stage's jitted form is cached under its structural key, so repeated
-        runs — and dynamic-param sweeps — reuse every per-stage compile."""
-        init, stages, finalize = dag.build_stages_parametric()
-        skey = dag.structure_key()
-        dynp = dag.dynamic_params()
-        src_key = tuple(sorted(dag.sources.items()))
+        """Stage-by-stage execution with host-spilled intermediates at
+        *fused-stage* granularity: a fused chain of low-weight edges
+        spills once, not once per edge — the plan lowering cuts the
+        "HDFS" round-trip volume.  Each stage's jitted form is cached
+        under its structural key, so repeated runs — and dynamic-param
+        sweeps — reuse every per-stage compile."""
+        plan = plans.lower(dag)
+        init, stages, finalize = plan.stages_parametric()
+        pkey = plan.structure_key()
+        stage_dyns = plan.stage_dyn_tuples(dag.dynamic_params())
+        src_key = tuple(sorted(plan.sources.items()))
         jinit = self._cached_stage(
             ("init", vmap, src_key),
             lambda: jax.vmap(init) if vmap else init)
@@ -664,12 +751,12 @@ class HadoopStack(Stack):
                 lambda s=stage, hp=prev is None: (
                     jax.vmap(s, in_axes=(0, 0, None if hp else 0, None))
                     if vmap else s))
-            out = sfn(rng, xs, prev, dynp[si])
+            out = sfn(rng, xs, prev, stage_dyns[si])
             host = np.asarray(out)                   # spill to "disk"
             io_bytes += host.nbytes * 2.0            # write + read back
             nodes[dst] = host
         jfin = self._cached_stage(
-            ("finalize", vmap, skey),
+            ("finalize", vmap, pkey),
             lambda: jax.vmap(finalize) if vmap else finalize)
         result = jfin({k: jnp.asarray(v) for k, v in nodes.items()})
         jax.block_until_ready(result)

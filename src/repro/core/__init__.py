@@ -10,6 +10,8 @@ from .metrics import (HW_V5E, CostReport, HardwareSpec, Roofline,
                       roofline_from_report, vector_accuracy)
 from .profiler import WorkloadProfile, characterize, decompose_to_dwarfs
 from .proxy import ProxyBenchmark, proxy_from_dwarf_weights
+from .schedule import (BucketSchedule, ExecutionPlan, FusedStage,
+                       fusion_threshold, lower)
 
 __all__ = [
     "AutoTuner", "PopulationTuner", "PopulationTuneResult", "TuneResult",
@@ -19,4 +21,6 @@ __all__ = [
     "metric_vector", "roofline_from_report", "vector_accuracy",
     "WorkloadProfile", "characterize", "decompose_to_dwarfs",
     "ProxyBenchmark", "proxy_from_dwarf_weights",
+    "BucketSchedule", "ExecutionPlan", "FusedStage", "fusion_threshold",
+    "lower",
 ]

@@ -285,6 +285,11 @@ class Generation:
     mean_accuracy: float          # population mean (search health signal)
     best_deviation: float         # worst |deviation| of the elite
     candidates: int               # candidates scored this generation
+    #: per-bucket share of the generation's weighted-cost mass (the
+    #: stratified schedule the candidates scored/executed under)
+    bucket_masses: Optional[List[float]] = None
+    #: per-bucket vmapped-while trip bounds (execution cost diagnostics)
+    bucket_trips: Optional[List[int]] = None
 
 
 @dataclasses.dataclass
@@ -351,7 +356,9 @@ class PopulationTuner:
                  seed: int = 0,
                  stack: str = "openmp",
                  execute: bool = True,
-                 weights: Optional[Dict[str, float]] = None):
+                 weights: Optional[Dict[str, float]] = None,
+                 stratify: bool = True,
+                 bucket_size: Optional[int] = None):
         self.target = target_metrics
         self.keys = [k for k in metric_keys
                      if abs(target_metrics.get(k, 0.0)) > 1e-12]
@@ -359,6 +366,7 @@ class PopulationTuner:
         self.population = max(2, int(population))
         self.generations = max(1, int(generations))
         self.max_candidates = max_candidates
+        self.elite_frac = elite_frac
         self.elite = max(1, int(round(elite_frac * self.population)))
         self.explore = max(1, int(round(explore_frac * self.population)))
         self.sigma_floor = sigma_floor
@@ -366,7 +374,12 @@ class PopulationTuner:
         self.stack = stack
         self.execute = execute
         self.weights = dict(DEFAULT_WEIGHTS) if weights is None else weights
+        #: score/sample per weight bucket (the ExecutionPlan stratification)
+        #: so the candidate budget is spent where the cost mass sits
+        self.stratify = stratify
+        self.bucket_size = bucket_size
         self.candidates_evaluated = 0
+        self._scorer = None
 
     # -- scoring --------------------------------------------------------------
 
@@ -381,31 +394,86 @@ class PopulationTuner:
 
     def _finite_mask(self, proxy: ProxyBenchmark,
                      matrix: np.ndarray) -> np.ndarray:
-        """One vmapped executable call over the whole population; rejects
-        candidates whose dynamic params drive the proxy non-finite."""
+        """One bucketed population execution (one vmapped call per weight
+        stratum); rejects candidates whose dynamic params drive the proxy
+        non-finite."""
         from ..api.stack import get_stack
         report = get_stack(self.stack).run_population(
-            proxy, matrix, space=self._space)
+            proxy, matrix, space=self._space, bucket_size=self.bucket_size)
         return np.isfinite(np.asarray(report.result, np.float64))
 
     # -- sampling -------------------------------------------------------------
 
+    @staticmethod
+    def _log_normal_draw(rows: np.ndarray, count: int, sigma_floor: float,
+                         rs: np.random.RandomState) -> np.ndarray:
+        """``count`` log-normal samples around an elite subset's mean."""
+        log_e = np.log(np.maximum(rows, 1e-3))
+        mu = log_e.mean(axis=0)
+        sigma = np.maximum(log_e.std(axis=0), sigma_floor)
+        return np.exp(mu + sigma * rs.standard_normal((count, mu.size)))
+
+    def _search_bucket_size(self, n: int) -> int:
+        """Stratification granularity for *search* (sampling/budget): a
+        handful of multi-candidate strata over the population, independent
+        of the per-device *execution* bucket size (which degenerates to
+        singleton buckets on CPU — useless as an elite pool)."""
+        if self.bucket_size is not None:
+            return self.bucket_size
+        return max(2, math.ceil(n / 4))
+
+    @staticmethod
+    def _slot_allocation(masses: np.ndarray, slots: int) -> np.ndarray:
+        """Largest-remainder split of ``slots`` proportional to the bucket
+        cost masses — the candidate budget lands where the weight mass is.
+        Always sums exactly to ``slots`` (zero-mass populations fall back
+        to round-robin over the stable remainder order)."""
+        raw = np.asarray(masses, np.float64) * slots
+        counts = np.floor(raw).astype(int)
+        rem = slots - int(counts.sum())
+        if rem > 0:
+            order = np.argsort(-(raw - counts), kind="stable")
+            np.add.at(counts, order[np.arange(rem) % order.size], 1)
+        return counts
+
     def _evolve(self, matrix: np.ndarray, acc: np.ndarray,
                 gen: int) -> np.ndarray:
-        """Next generation: log-normal around the elite mean (diagonal
+        """Next generation: log-normal around elite means (diagonal
         sigma), elitism for the single best, fresh log-uniform samples for
-        the explore slots."""
+        the explore slots.
+
+        With ``stratify`` (default) the evolved slots are allocated across
+        the population's weight buckets proportional to each bucket's cost
+        mass, every bucket evolving around its *own* local elite — the
+        candidate budget concentrates where the workload's weight mass
+        (and execution cost) actually sits, instead of treating a
+        glue-weight candidate and a straggler identically."""
         space, dyn = self._space, self._dyn_mask
         rs = np.random.RandomState(self.seed + 1000 * (gen + 1))
         order = np.argsort(-acc)
-        elite = matrix[order[: self.elite]][:, dyn]
-        log_e = np.log(np.maximum(elite, 1e-3))
-        mu = log_e.mean(axis=0)
-        sigma = np.maximum(log_e.std(axis=0), self.sigma_floor)
         n = self.population
-        drawn = np.exp(mu + sigma * rs.standard_normal((n, mu.size)))
         out = np.tile(self._base, (n, 1))
-        out[:, dyn] = drawn
+        sched = (self._scorer.bucket_schedule(
+                     matrix, self._search_bucket_size(matrix.shape[0]))
+                 if self.stratify and self._scorer is not None else None)
+        evolved = n - self.explore - 1
+        if sched is not None and len(sched.buckets) > 1 and evolved > 0:
+            rows: List[np.ndarray] = []
+            counts = self._slot_allocation(sched.bucket_masses(), evolved)
+            for bi, b in enumerate(sched.buckets):
+                if counts[bi] == 0:
+                    continue
+                idx = b.indices[:b.valid]
+                local = idx[np.argsort(-acc[idx], kind="stable")]
+                k_elite = max(1, int(round(self.elite_frac * b.valid)))
+                rows.append(self._log_normal_draw(
+                    matrix[local[:k_elite]][:, dyn], int(counts[bi]),
+                    self.sigma_floor, rs))
+            out[self.explore:n - 1, dyn] = np.concatenate(rows, axis=0)
+        else:
+            elite = matrix[order[: self.elite]][:, dyn]
+            out[:, dyn] = self._log_normal_draw(elite, n, self.sigma_floor,
+                                                rs)
         out[: self.explore, dyn] = space.sample(
             self.explore, seed=self.seed + 7777 * (gen + 1))[:, dyn]
         out[-1] = matrix[order[0]]                    # elitism
@@ -414,6 +482,22 @@ class PopulationTuner:
         # sit outside the nominal bounds)
         out[:, dyn] = space.clamp(out)[:, dyn]
         return out
+
+    def _trim_to_budget(self, matrix: np.ndarray, budget: int) -> np.ndarray:
+        """Trim a generation to the remaining candidate budget, draining
+        buckets heaviest-cost-mass first (schedule-by-cost, not
+        enumeration order) while preserving the original candidate order
+        of the survivors."""
+        if not self.stratify or self._scorer is None:
+            return matrix[:budget]
+        sched = self._scorer.bucket_schedule(
+            matrix, self._search_bucket_size(matrix.shape[0]))
+        keep: List[int] = []
+        for bi in np.argsort(-sched.bucket_masses(), kind="stable"):
+            for i in sched.buckets[bi].indices[:sched.buckets[bi].valid]:
+                if len(keep) < budget:
+                    keep.append(int(i))
+        return matrix[np.sort(np.asarray(keep, np.int64))]
 
     # -- main loop ------------------------------------------------------------
 
@@ -434,7 +518,7 @@ class PopulationTuner:
                 proxy, False, 0, 0, init_acc, init_acc,
                 self._worst_dev(init_metrics), [])
 
-        scorer = PopulationScorer(proxy.dag, space)
+        scorer = self._scorer = PopulationScorer(proxy.dag, space)
         matrix = space.sample_dynamic(self.population, self._base,
                                       seed=self.seed)
         matrix[-1] = self._base       # the un-tuned start competes too
@@ -451,8 +535,12 @@ class PopulationTuner:
                 gen -= 1
                 break
             if budget_left is not None and budget_left < matrix.shape[0]:
-                matrix = matrix[:budget_left]
-            metrics = scorer(matrix)
+                matrix = self._trim_to_budget(matrix, budget_left)
+            if self.stratify:
+                metrics, sched = scorer.score_bucketed(
+                    matrix, self._search_bucket_size(matrix.shape[0]))
+            else:
+                metrics, sched = scorer(matrix), None
             acc = self._accuracies(metrics)
             self.candidates_evaluated += matrix.shape[0]
             if self.execute:
@@ -466,7 +554,12 @@ class PopulationTuner:
                 index=gen, best_accuracy=float(acc[bi]),
                 mean_accuracy=float(acc.mean()),
                 best_deviation=self._worst_dev(best_metrics),
-                candidates=int(matrix.shape[0])))
+                candidates=int(matrix.shape[0]),
+                bucket_masses=(None if sched is None
+                               else [float(m)
+                                     for m in sched.bucket_masses()]),
+                bucket_trips=(None if sched is None
+                              else sched.trip_bounds())))
             if self._worst_dev(best_metrics) <= self.tol:
                 converged = True
                 break

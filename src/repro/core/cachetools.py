@@ -1,0 +1,50 @@
+"""Shared cache plumbing for the compile-once/run-many machinery.
+
+Three subsystems keep keyed caches of expensive artifacts — the per-stack
+compiled-executable caches (:mod:`repro.api.stack`), the engine's HLO
+report / executable caches (:mod:`repro.core.engine`), and the execution-
+plan cache (:mod:`repro.core.schedule`).  They all share the same two
+needs, deduplicated here:
+
+* **FIFO eviction** — a long-lived tuning or serving process sweeping
+  *structural* params must not accumulate compiled programs or reports
+  without bound; dicts preserve insertion order, so popping the first key
+  evicts the oldest entry.
+* **hit/miss accounting** — the no-retrace tests and the engine
+  benchmarks assert the compile-once contract through these counters.
+
+No jax imports: this module must stay importable from anywhere in the
+package without initializing a backend.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+
+def evict_oldest(cache: Dict, cap: Optional[int]) -> None:
+    """Drop oldest-inserted entries until ``cache`` holds at most ``cap``."""
+    if cap is None:
+        return
+    while len(cache) > cap:
+        cache.pop(next(iter(cache)))
+
+
+def cached_get(cache: Dict, key: Any, make: Callable[[], Any],
+               stats: Optional[Dict[str, int]] = None,
+               cap: Optional[int] = None,
+               hit: str = "hits", miss: str = "misses") -> Any:
+    """The shared lookup-or-build pattern: fetch ``key`` from ``cache``,
+    building (and FIFO-evicting) on a miss, bumping the ``stats`` counters
+    either way.  ``make`` runs un-locked — callers are single-threaded per
+    cache (the JAX tracing model) — and its result is what gets cached."""
+    value = cache.get(key)
+    if value is None:
+        if stats is not None:
+            stats[miss] = stats.get(miss, 0) + 1
+        value = make()
+        cache[key] = value
+        evict_oldest(cache, cap)
+    elif stats is not None:
+        stats[hit] = stats.get(hit, 0) + 1
+    return value

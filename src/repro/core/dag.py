@@ -14,17 +14,26 @@ shape-free extras — :meth:`ProxyDAG.dynamic_params`) that
 :meth:`ProxyDAG.build_parametric` accepts as a jitted argument: stepping a
 dynamic param re-executes the same compiled program, no retrace.
 
-Three execution forms share one edge semantics (``_edge_out``):
+Every execution form lowers through one pipeline —
+:func:`repro.core.schedule.lower` — which turns the DAG into an
+:class:`~repro.core.schedule.ExecutionPlan` (ordered fused stages + the
+population bucket schedule).  The historical ``build*`` methods remain as
+thin shims over an *unfused* plan (legacy one-stage-per-edge semantics,
+current params baked):
 
-* :meth:`ProxyDAG.build` — one fused jit-able ``fn(rng) -> scalar`` with the
-  current params baked in (the openmp / mpi / spark execution shape; fully
-  analyzable HLO with ``known_trip_count`` weights for the profiler).
+* :meth:`ProxyDAG.build` — one jit-able ``fn(rng) -> scalar`` with the
+  current params baked in (fully analyzable HLO with ``known_trip_count``
+  weights for the profiler).
 * :meth:`ProxyDAG.build_parametric` — ``fn(rng, dyn) -> scalar``, the
-  compile-once/run-many form the ``repro.api.stack`` executable cache and
-  the ``repro.core.engine`` cost model key on ``structure_key()``.
-* :meth:`ProxyDAG.build_stages` — per-edge stages a driver may materialize
-  between (the hadoop execution shape: host-spilled intermediates);
-  :meth:`ProxyDAG.build_stages_parametric` is its compile-once form.
+  compile-once/run-many form the ``repro.core.engine`` cost model keys on
+  ``structure_key()``.
+* :meth:`ProxyDAG.build_population` — the vmapped candidate-batch form.
+* :meth:`ProxyDAG.build_stages` / :meth:`ProxyDAG.build_stages_parametric`
+  — deprecated per-edge staging; staged drivers consume
+  ``ExecutionPlan.stages_parametric()`` (fused-stage granularity) instead.
+
+The stacks (:mod:`repro.api.stack`) lower with the live fusion threshold
+(``REPRO_FUSION_THRESHOLD``) and cache executables per plan structure key.
 """
 
 from __future__ import annotations
@@ -206,17 +215,23 @@ class ProxyDAG:
         cached executable without retracing."""
         return tuple(e.dynamic_values() for e in self.edges)
 
-    # -- build ---------------------------------------------------------------
+    # -- build (thin shims over the ExecutionPlan lowering pipeline) ---------
+
+    def _legacy_plan(self):
+        """Fresh *unfused* plan (one stage per edge, current params baked):
+        the exact legacy execution semantics every ``build*`` shim keeps."""
+        from .schedule import lower
+        return lower(self, threshold=0.0, cache=False)
 
     def build(self) -> Callable[[jax.Array], jnp.ndarray]:
         """Returns a jit-able fn(rng) -> scalar executing the whole DAG."""
-        return self._build(parametric=False)
+        return self._legacy_plan().build()
 
     def build_parametric(self) -> Callable:
         """Returns ``fn(rng, dyn) -> scalar`` where ``dyn`` is a
         :meth:`dynamic_params`-shaped pytree of traced scalars — the
         compile-once/run-many execution form."""
-        return self._build(parametric=True)
+        return self._legacy_plan().build_parametric()
 
     def build_population(self) -> Callable:
         """Returns ``fn(rng, dyn_batched) -> (n,)`` evaluating a whole
@@ -225,52 +240,16 @@ class ProxyDAG:
         leaves carry a leading candidate axis (see
         ``ParamSpace.stack_candidates``), vmapped over so every candidate
         shares the rng, the generated sources, and — once jitted — a
-        single compiled executable (zero retraces per candidate)."""
-        pfn = self.build_parametric()
-
-        def population(rng: jax.Array, dyn_batched) -> jnp.ndarray:
-            return jax.vmap(lambda dyn: pfn(rng, dyn))(dyn_batched)
-
-        return population
-
-    def _build(self, parametric: bool) -> Callable:
-        self.validate()
-        edges = self._rounded_edges()
-        sources = dict(self.sources)
-        sink = self.sink
-
-        def execute(rng: jax.Array, dyn) -> jnp.ndarray:
-            nodes = _init_sources(sources, rng)
-            for ei, e in enumerate(edges):
-                x = _gather_inputs(e, [nodes[s] for s in e.src])
-                out = _edge_out(e, ei, x, rng,
-                                dyn=dyn[ei] if dyn is not None else None)
-                nodes[e.dst] = _accumulate(nodes.get(e.dst), out)
-            if sink is not None:
-                return jnp.sum(nodes[sink])
-            return sum(jnp.sum(nodes[t]) for t in _terminals(edges))
-
-        if parametric:
-            return execute
-        return lambda rng: execute(rng, None)
+        single compiled executable (zero retraces per candidate).  Stacks
+        additionally stratify candidate batches into weight buckets (see
+        :meth:`repro.core.schedule.ExecutionPlan.bucket_schedule`)."""
+        return self._legacy_plan().build_population()
 
     def build_stages(self):
-        """Per-edge execution stages with semantics identical to ``build``.
-
-        Returns ``(init_fn, stages, finalize_fn)`` where
-
-        * ``init_fn(rng) -> {source: array}`` generates the input data sets,
-        * ``stages`` is a list of ``(src_names, dst, stage_fn)`` in edge
-          order with ``stage_fn(rng, xs, prev) -> new dst value``
-          (``prev`` is the dst node's prior value for accumulation, or
-          ``None``), and
-        * ``finalize_fn(nodes) -> scalar`` performs the sink reduction.
-
-        A driver may materialize every intermediate between stages — the
-        Hadoop execution model.  The computed result matches ``build`` up
-        to float32 re-association from per-stage compilation (XLA fuses
-        differently when each edge is jitted alone).
-        """
+        """Deprecated per-edge staging (see :meth:`build_stages_parametric`
+        for the protocol); staged drivers consume
+        ``schedule.lower(dag).stages_parametric()`` — fused-stage
+        granularity — instead."""
         init_fn, stages, finalize_fn = self.build_stages_parametric()
         return (init_fn,
                 [(srcs, dst, (lambda s: lambda rng, xs, prev:
@@ -279,39 +258,30 @@ class ProxyDAG:
                 finalize_fn)
 
     def build_stages_parametric(self):
-        """Compile-once form of :meth:`build_stages`: stages are
+        """Deprecated: use ``schedule.lower(dag).stages_parametric()``.
+
+        Legacy protocol kept for old staged drivers: stages are
         ``(src_names, dst, stage_fn, stage_key)`` with
-        ``stage_fn(rng, xs, prev, dyn_e)`` taking the edge's dynamic param
-        dict (or ``None`` for the baked-in static form) and ``stage_key``
-        the edge's :meth:`Edge.structure_key` — the cache key a staged
-        driver (the hadoop stack) reuses jitted stages under."""
-        self.validate()
-        edges = self._rounded_edges()
-        sources = dict(self.sources)
-        sink = self.sink
-
-        def init_fn(rng: jax.Array) -> Dict[str, jnp.ndarray]:
-            return _init_sources(sources, rng)
-
-        def make_stage(e: Edge, ei: int):
-            def stage(rng, xs, prev, dyn):
-                out = _edge_out(e, ei, _gather_inputs(e, list(xs)), rng,
-                                dyn=dyn)
-                return _accumulate(prev, out)
-            return stage
-
-        # the edge index seeds the per-repeat rng fold, so it is part of the
-        # stage identity alongside the structural key
-        stages = [(list(e.src), e.dst, make_stage(e, ei),
-                   (ei, e.structure_key()))
-                  for ei, e in enumerate(edges)]
-
-        def finalize_fn(nodes: Dict[str, jnp.ndarray]) -> jnp.ndarray:
-            if sink is not None:
-                return jnp.sum(nodes[sink])
-            return sum(jnp.sum(nodes[t]) for t in _terminals(edges))
-
-        return init_fn, stages, finalize_fn
+        ``stage_fn(rng, xs, prev, dyn_e)`` taking the *edge's* dynamic
+        param dict (or ``None``) and ``stage_key`` the
+        ``(edge_idx, Edge.structure_key())`` pair.  The ExecutionPlan form
+        differs in granularity (fused stages) and passes the member dyn
+        dicts as a tuple."""
+        warnings.warn(
+            "ProxyDAG.build_stages_parametric is deprecated; use "
+            "repro.core.schedule.lower(dag).stages_parametric()",
+            DeprecationWarning, stacklevel=2)
+        init_fn, stages, finalize_fn = \
+            self._legacy_plan().stages_parametric()
+        legacy = []
+        for srcs, dst, fn, key in stages:
+            members, skeys = key
+            legacy.append(
+                (srcs, dst,
+                 (lambda f: lambda rng, xs, prev, dyn_e:
+                  f(rng, xs, prev, (dyn_e,)))(fn),
+                 (members[0], skeys[0])))
+        return init_fn, legacy, finalize_fn
 
     # -- serialization -------------------------------------------------------
 

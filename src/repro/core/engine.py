@@ -30,12 +30,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .cachetools import evict_oldest as _evict_oldest
 from .dag import _INT_DYNAMIC, ProxyDAG, _init_sources, _terminals
 from .dwarfs import get_component
 from .dwarfs.base import fit_buffer
@@ -44,18 +45,14 @@ from .metrics import CostReport, analyze_hlo_text, metric_vector
 # process-wide caches: structure keys are value-hashable, so clones and
 # re-built DAGs with identical structure share entries.  Report caches hold
 # small dataclasses and can grow large; the executable cache retains
-# compiled XLA programs, so it is kept tight (FIFO eviction)
+# compiled XLA programs, so it is kept tight (FIFO eviction via the shared
+# repro.core.cachetools helpers)
 _BODY_CACHE: Dict[Tuple, CostReport] = {}
 _PIECE_CACHE: Dict[Tuple, CostReport] = {}
 _EXEC_CACHE: Dict[Tuple, Callable] = {}
 
 _REPORT_CACHE_CAP = 4096
 _EXEC_CACHE_CAP = 128
-
-
-def _evict_oldest(cache: Dict, cap: int) -> None:
-    while len(cache) > cap:
-        cache.pop(next(iter(cache)))
 
 _STATS = {"compiles": 0, "traces": 0, "hits": 0, "exec_compiles": 0}
 
@@ -228,6 +225,8 @@ class PopulationScorer:
 
     def __init__(self, dag: ProxyDAG, space, host_bytes: float = 0.0):
         self.host_bytes = host_bytes
+        self._dag = dag
+        self._space = space
         self._n_leaves = len(space)
         self._static = ~space.dynamic_mask()
         self._static_vals = space.values(dag)[self._static]
@@ -297,6 +296,36 @@ class PopulationScorer:
                               host_bytes=self.host_bytes) for i in range(n)]
 
     __call__ = score
+
+    # -- weight-stratified (per-bucket) view --------------------------------
+
+    def bucket_schedule(self, matrix, bucket_size: Optional[int] = None):
+        """The population's weight-stratified
+        :class:`~repro.core.schedule.BucketSchedule`, computed with the
+        same per-edge body costs the execution plan uses — so the scorer's
+        strata line up exactly with the strata the stacks execute, and the
+        tuner can spend its candidate budget where the weight mass is."""
+        from .schedule import (make_bucket_schedule, resolve_bucket_size,
+                               _edge_body_cost)
+        matrix = np.asarray(matrix, np.float64)
+        n = matrix.shape[0]
+        costs = np.zeros(n, np.float64)
+        trips = np.zeros(n, np.float64)
+        for info in self._edges:
+            w = np.round(np.maximum(matrix[:, info["w_idx"]], 0.0))
+            costs += w * max(_edge_body_cost(info["edge"]), 1.0)
+            trips += w
+        if bucket_size is None:
+            bucket_size = resolve_bucket_size(n)
+        return make_bucket_schedule(costs, trips, bucket_size)
+
+    def score_bucketed(self, matrix, bucket_size: Optional[int] = None):
+        """``(metrics, schedule)``: metric dicts in the caller's candidate
+        order plus the schedule that stratifies them — per-bucket scoring
+        for the population tuner (scores are bucket-composition
+        independent; the schedule carries the per-bucket mass/trip
+        accounting)."""
+        return self.score(matrix), self.bucket_schedule(matrix, bucket_size)
 
 
 def measure_population(dag: ProxyDAG, space, matrix,

@@ -96,6 +96,17 @@ def population_shardings(mesh: Mesh, dyn_batched: Any,
     return jax.tree.map(leaf, dyn_batched)
 
 
+def bucket_shardings(mesh: Mesh, bucket_dynb: Any,
+                     prefer: Tuple[str, ...] = ("pod", "data")) -> Any:
+    """:func:`population_shardings` at weight-bucket granularity: the
+    ExecutionPlan's ``BucketSchedule`` hands each stratum to the stack as
+    its own candidate batch, so placement happens per bucket — every
+    bucket shares one executable and its leading axis shards over the
+    mesh when the *bucket* size divides (smaller-than-population batches
+    replicate instead of forcing uneven shards)."""
+    return population_shardings(mesh, bucket_dynb, prefer=prefer)
+
+
 # ---------------------------------------------------------------------------
 # Parameter specs
 # ---------------------------------------------------------------------------

@@ -174,7 +174,10 @@ def test_16_candidate_population_compiles_at_most_one_executable():
     assert cache_stats()["misses"] == m2
 
 
-def test_population_size_change_is_a_new_executable_not_a_retrace():
+def test_population_size_change_reuses_the_bucket_executable():
+    # executables are keyed on (plan, bucket size), not population size:
+    # growing or shrinking the population re-buckets onto the same
+    # compiled program — only an explicit bucket-size change compiles
     stack = get_stack("openmp")
     dag = _sweep_dag()
     space = ParamSpace.from_dag(dag)
@@ -182,9 +185,12 @@ def test_population_size_change_is_a_new_executable_not_a_retrace():
     stack.run_population(dag, space.sample_dynamic(8, base, seed=0))
     t0 = cache_stats()["traces"]
     stack.run_population(dag, space.sample_dynamic(8, base, seed=1))
-    assert cache_stats()["traces"] == t0          # same size: cache hit
+    assert cache_stats()["traces"] == t0          # same schedule: cache hit
     stack.run_population(dag, space.sample_dynamic(4, base, seed=1))
-    assert cache_stats()["traces"] == t0 + 1      # new size: one compile
+    assert cache_stats()["traces"] == t0          # same bucket size: hit
+    stack.run_population(dag, space.sample_dynamic(8, base, seed=2),
+                         bucket_size=8)
+    assert cache_stats()["traces"] == t0 + 1      # new bucket size: compile
 
 
 # ---------------------------------------------------------------------------
@@ -251,6 +257,41 @@ def test_measure_population_matches_sequential_measure():
         for k, v in seq.items():
             assert pop[i][k] == pytest.approx(v, rel=1e-9, abs=1e-12), (
                 f"candidate {i} metric {k}")
+
+
+def test_tuner_slot_allocation_is_exact_even_for_zero_mass():
+    tuner = PopulationTuner({"mix_sort": 1.0}, population=12)
+    # proportional split sums exactly to the slot count
+    counts = tuner._slot_allocation(np.array([0.5, 0.3, 0.2]), 10)
+    assert counts.sum() == 10 and (counts > 0).all()
+    # zero-mass population (every weight evolved to 0): round-robin, no
+    # broadcast crash in _evolve
+    counts = tuner._slot_allocation(np.zeros(3), 10)
+    assert counts.sum() == 10
+
+
+def test_tuner_evolves_zero_weight_population_without_crashing():
+    dag = _sweep_dag()
+    target = engine.measure(dag)
+    tuner = PopulationTuner(target, population=6, generations=2, seed=0,
+                            execute=False)
+    from repro.api import ParamSpace
+    space = ParamSpace.from_dag(dag)
+    tuner._space, tuner._dyn_mask = space, space.dynamic_mask()
+    tuner._base = space.values(dag)
+    tuner._scorer = engine.PopulationScorer(dag, space)
+    matrix = np.tile(tuner._base, (6, 1))
+    matrix[:, tuner._dyn_mask] = 0.0            # all weights pruned
+    out = tuner._evolve(matrix, np.zeros(6), gen=1)
+    assert out.shape == matrix.shape
+
+
+def test_tuner_search_buckets_hold_multiple_candidates():
+    # search stratification must not collapse to the per-device execution
+    # bucket size (1 on CPU): singleton "elites" would make the evolution
+    # accuracy-blind
+    tuner = PopulationTuner({"mix_sort": 1.0}, population=16)
+    assert tuner._search_bucket_size(16) >= 2
 
 
 def test_population_tuner_runs_generations_deterministically():
