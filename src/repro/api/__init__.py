@@ -32,14 +32,37 @@ from .params import (CORE_FIELDS, EXTRA_BOUNDS, FIELD_BOUNDS, INT_FIELDS,
                      ParamLeaf, ParamSpace, bounds_for)
 from .spec import SPEC_VERSION, ProxySpec, SpecError, validate_spec_json
 from .stack import (HadoopStack, MPIStack, OpenMPStack, RunReport,
-                    SparkStack, Stack, cache_stats, get_stack, list_stacks,
-                    register_stack, reset_cache_stats)
+                    SparkStack, Stack, cache_cap, cache_stats, get_stack,
+                    list_stacks, register_stack, reset_cache_stats)
+
+
+def tune_structure(proxy, target_metrics, **kw):
+    """Tune the full Fig.-3 design space of ``proxy`` — structure *and*
+    weights — toward ``target_metrics``.
+
+    ``proxy`` may be a ``ProxyBenchmark``, ``ProxySpec``, or ``ProxyDAG``;
+    keyword args configure :class:`repro.core.structsearch.StructuralTuner`
+    (``max_candidates`` total budget, ``structure_budget_frac`` split,
+    ``components`` mutation pool, ``seed_structures``, ...).  Returns a
+    :class:`~repro.core.structsearch.StructuralTuneResult` whose ``proxy``
+    holds the best machine-generated structure with tuned weights — ready
+    for ``ProxySpec.from_benchmark`` serialization or any ``get_stack``
+    execution."""
+    from ..core.dag import ProxyDAG
+    from ..core.proxy import ProxyBenchmark
+    from ..core.structsearch import StructuralTuner
+    if isinstance(proxy, ProxyDAG):
+        proxy = ProxyBenchmark(dag=proxy)
+    elif hasattr(proxy, "to_benchmark"):            # ProxySpec
+        proxy = proxy.to_benchmark()
+    return StructuralTuner(target_metrics, **kw).tune(proxy)
+
 
 __all__ = [
     "CORE_FIELDS", "EXTRA_BOUNDS", "FIELD_BOUNDS", "INT_FIELDS",
     "ParamLeaf", "ParamSpace", "bounds_for",
     "SPEC_VERSION", "ProxySpec", "SpecError", "validate_spec_json",
     "HadoopStack", "MPIStack", "OpenMPStack", "RunReport", "SparkStack",
-    "Stack", "cache_stats", "get_stack", "list_stacks", "register_stack",
-    "reset_cache_stats",
+    "Stack", "cache_cap", "cache_stats", "get_stack", "list_stacks",
+    "register_stack", "reset_cache_stats", "tune_structure",
 ]

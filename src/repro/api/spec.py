@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import numbers
 import warnings
 from typing import Any, Dict, List, Optional
 
@@ -28,6 +29,14 @@ from ..core.dwarfs.base import REGISTRY
 SPEC_VERSION = 2
 
 _EDGE_NUMERIC = ("data_size", "chunk_size", "parallelism", "weight")
+
+
+def _is_num(v: Any) -> bool:
+    """Accept any real number — machine-generated specs (structure
+    mutations, tuner-applied vectors) may carry numpy scalars, which are
+    ``numbers.Real`` but not ``int``/``float``; ``Edge.to_json``
+    normalizes them to JSON-native types on the way back out."""
+    return isinstance(v, numbers.Real) and not isinstance(v, bool)
 
 
 class SpecError(ValueError):
@@ -58,7 +67,7 @@ def _check_edge(i: int, e: Any) -> None:
         _fail(f"{path}.dst", "expected string node name")
     for key in _EDGE_NUMERIC:
         v = e.get(key)
-        if v is not None and not isinstance(v, (int, float)):
+        if v is not None and not _is_num(v):
             _fail(f"{path}.{key}", f"expected number, got {type(v).__name__}")
     extra = e.get("extra", {})
     if not isinstance(extra, dict):
@@ -66,7 +75,7 @@ def _check_edge(i: int, e: Any) -> None:
     for k, v in extra.items():
         if not isinstance(k, str):
             _fail(f"{path}.extra", f"non-string key {k!r}")
-        if not isinstance(v, (int, float, str, bool)):
+        if not (_is_num(v) or isinstance(v, (str, bool))):
             _fail(f"{path}.extra[{k!r}]",
                   f"expected JSON scalar, got {type(v).__name__}")
 
@@ -89,7 +98,7 @@ def validate_spec_json(d: Any) -> None:
     for k, v in sources.items():
         if not isinstance(k, str):
             _fail("sources", f"non-string node name {k!r}")
-        if not isinstance(v, (int, float)) or v <= 0:
+        if not _is_num(v) or v <= 0:
             _fail(f"sources[{k!r}]", "expected positive element count")
     edges = d.get("edges")
     if not isinstance(edges, list):

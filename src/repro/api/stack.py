@@ -64,12 +64,26 @@ from ..core.dag import ProxyDAG
 # module-level counters expose hit/miss/trace activity for the no-retrace
 # tests and the engine benchmarks.
 
-CACHE_STATS = {"hits": 0, "misses": 0, "traces": 0}
+CACHE_STATS = {"hits": 0, "misses": 0, "traces": 0, "evictions": 0}
 
 #: executables retained per stack (FIFO eviction; a long-lived tuning or
 #: serving process sweeping *structural* params must not accumulate
-#: compiled programs without bound)
+#: compiled programs without bound).  A structural search proposes many
+#: distinct structures, so the cap is tunable (``REPRO_EXEC_CACHE_CAP``)
+#: and the ``evictions`` counter exposes thrash: evictions growing while
+#: the same structures keep re-running means the cap is too tight and
+#: every revisit re-compiles.
 CACHE_CAP = 256
+
+
+def cache_cap() -> int:
+    """Resolve the per-stack executable-cache cap
+    (``REPRO_EXEC_CACHE_CAP`` env var; default :data:`CACHE_CAP`)."""
+    import os
+    raw = os.environ.get("REPRO_EXEC_CACHE_CAP")
+    if raw is None or raw.strip() == "":
+        return CACHE_CAP
+    return max(1, int(raw))
 
 
 def cache_stats() -> Dict[str, int]:
@@ -211,7 +225,7 @@ class Stack(abc.ABC):
         return cached_get(
             cache, (batch, plan.structure_key()),
             lambda: self._wrap_parametric(plan.build_parametric(), batch),
-            CACHE_STATS, CACHE_CAP)
+            CACHE_STATS, cache_cap())
 
     def _wrap_parametric(self, pfn: Callable, batch: bool) -> Callable:
         """Bake this stack's execution model into a jitted parametric fn."""
@@ -251,7 +265,7 @@ class Stack(abc.ABC):
         cache = self.__dict__.setdefault("_dag_cache", {})
         return cached_get(
             cache, (("population", n), plan.structure_key()),
-            lambda: self._wrap_population(plan, n), CACHE_STATS, CACHE_CAP)
+            lambda: self._wrap_population(plan, n), CACHE_STATS, cache_cap())
 
     def _wrap_population(self, plan, n: int) -> Callable:
         """Bake this stack's execution model into the canonical vmapped
@@ -718,7 +732,7 @@ class HadoopStack(Stack):
 
             return jax.jit(counted)
 
-        return cached_get(cache, key, build, CACHE_STATS, CACHE_CAP)
+        return cached_get(cache, key, build, CACHE_STATS, cache_cap())
 
     def _run_stages(self, dag: ProxyDAG, rng: jax.Array, vmap: bool
                     ) -> Tuple[Any, float]:

@@ -2,8 +2,8 @@
 # methodology — eight dwarf components, DAG-like proxy benchmarks, the
 # profiler (HLO metric vector) and the auto-tuning tool.
 from .autotune import (AutoTuner, PopulationTuner, PopulationTuneResult,
-                       TuneResult, autotune, population_tune)
-from .dag import Edge, ProxyDAG
+                       TuneResult, autotune, population_tune, split_budget)
+from .dag import Edge, ProxyDAG, StructureError
 from .dwarfs import DWARFS, ComponentParams, get_component
 from .metrics import (HW_V5E, CostReport, HardwareSpec, Roofline,
                       analyze_hlo_text, eq1_accuracy, metric_vector,
@@ -12,10 +12,13 @@ from .profiler import WorkloadProfile, characterize, decompose_to_dwarfs
 from .proxy import ProxyBenchmark, proxy_from_dwarf_weights
 from .schedule import (BucketSchedule, ExecutionPlan, FusedStage,
                        fusion_threshold, lower)
+from .structsearch import (Mutation, StructuralTuner, StructuralTuneResult,
+                           propose_mutation, structural_tune)
 
 __all__ = [
     "AutoTuner", "PopulationTuner", "PopulationTuneResult", "TuneResult",
-    "autotune", "population_tune", "Edge", "ProxyDAG", "DWARFS",
+    "autotune", "population_tune", "split_budget", "Edge", "ProxyDAG",
+    "StructureError", "DWARFS",
     "ComponentParams", "get_component", "HW_V5E", "CostReport",
     "HardwareSpec", "Roofline", "analyze_hlo_text", "eq1_accuracy",
     "metric_vector", "roofline_from_report", "vector_accuracy",
@@ -23,4 +26,6 @@ __all__ = [
     "ProxyBenchmark", "proxy_from_dwarf_weights",
     "BucketSchedule", "ExecutionPlan", "FusedStage", "fusion_threshold",
     "lower",
+    "Mutation", "StructuralTuner", "StructuralTuneResult",
+    "propose_mutation", "structural_tune",
 ]

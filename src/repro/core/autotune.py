@@ -575,3 +575,34 @@ class PopulationTuner:
 def population_tune(proxy: ProxyBenchmark, target_metrics: Dict[str, float],
                     **kw) -> PopulationTuneResult:
     return PopulationTuner(target_metrics, **kw).tune(proxy)
+
+
+# ---------------------------------------------------------------------------
+# Structural tuning (the outer loop over the Fig.-3 DAG design space)
+# ---------------------------------------------------------------------------
+#
+# PopulationTuner searches weights and dynamic params under ONE frozen
+# structure; repro.core.structsearch.StructuralTuner wraps it with an outer
+# evolutionary loop over *structure mutations* (edge insertion/removal,
+# component swaps, chain split/merge), running this module's PopulationTuner
+# as the inner weight loop only for surviving elite structures.  The two
+# loops share one total candidate budget, split here.
+
+#: default share of ``max_candidates`` spent scoring structures (the rest
+#: funds the inner per-elite weight generations)
+DEFAULT_STRUCTURE_BUDGET_FRAC = 0.25
+
+
+def split_budget(total: int, structure_frac: float
+                 ) -> Tuple[int, int]:
+    """Split a total candidate budget into ``(structure, weight)`` shares.
+
+    Every *structure* scored by the outer loop counts one candidate
+    against the first share; the remainder funds the inner
+    :class:`PopulationTuner` runs on elite structures.  The split is the
+    fairness knob that lets ``StructuralTuner`` compete with a weight-only
+    tuner under one fixed ``max_candidates``."""
+    total = max(0, int(total))
+    frac = min(max(float(structure_frac), 0.0), 1.0)
+    s = int(round(total * frac))
+    return s, total - s

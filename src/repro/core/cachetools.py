@@ -22,12 +22,22 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, Optional
 
 
-def evict_oldest(cache: Dict, cap: Optional[int]) -> None:
-    """Drop oldest-inserted entries until ``cache`` holds at most ``cap``."""
+def evict_oldest(cache: Dict, cap: Optional[int],
+                 stats: Optional[Dict[str, int]] = None,
+                 evict: str = "evictions") -> int:
+    """Drop oldest-inserted entries until ``cache`` holds at most ``cap``;
+    returns (and counts into ``stats``) how many were dropped.  A nonzero
+    steady-state eviction rate means the cap is thrashing — a structural
+    search sweeping many DAG shapes watches this counter."""
     if cap is None:
-        return
+        return 0
+    dropped = 0
     while len(cache) > cap:
         cache.pop(next(iter(cache)))
+        dropped += 1
+    if dropped and stats is not None:
+        stats[evict] = stats.get(evict, 0) + dropped
+    return dropped
 
 
 def cached_get(cache: Dict, key: Any, make: Callable[[], Any],
@@ -44,7 +54,7 @@ def cached_get(cache: Dict, key: Any, make: Callable[[], Any],
             stats[miss] = stats.get(miss, 0) + 1
         value = make()
         cache[key] = value
-        evict_oldest(cache, cap)
+        evict_oldest(cache, cap, stats)
     elif stats is not None:
         stats[hit] = stats.get(hit, 0) + 1
     return value

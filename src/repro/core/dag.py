@@ -44,12 +44,30 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .dwarfs import ComponentParams, get_component
 from .dwarfs.base import fit_buffer
 
+
+class StructureError(ValueError):
+    """A DAG violates the structural invariants machine-generated
+    structures must hold (see :meth:`ProxyDAG.validate_structure`)."""
+
 #: dynamic fields passed as i32 (they become loop bounds); the rest are f32
 _INT_DYNAMIC = {"weight", "rounds", "mix_rounds", "hops", "levels"}
+
+
+def _json_scalar(v):
+    """Coerce a param scalar to its JSON-native type (numpy ints/floats —
+    a tuner-applied vector's dtype — are not json-serializable)."""
+    if isinstance(v, bool) or isinstance(v, str):
+        return v
+    if isinstance(v, (int, np.integer)):
+        return int(v)
+    if isinstance(v, (float, np.floating)):
+        return float(v)
+    return v
 
 
 @dataclasses.dataclass
@@ -63,9 +81,13 @@ class Edge:
         p = self.params.rounded()
         return {
             "component": self.component, "src": list(self.src), "dst": self.dst,
-            "data_size": p.data_size, "chunk_size": p.chunk_size,
-            "parallelism": p.parallelism, "weight": p.weight,
-            "extra": dict(p.extra),
+            "data_size": int(p.data_size), "chunk_size": int(p.chunk_size),
+            "parallelism": int(p.parallelism), "weight": int(p.weight),
+            # machine-generated params (tuner vectors, mutations) may carry
+            # numpy scalars; normalize to JSON-native types so the spec
+            # round-trip is lossless for any structure, not just the
+            # hand-written proxies
+            "extra": {k: _json_scalar(v) for k, v in p.extra.items()},
         }
 
     @classmethod
@@ -74,7 +96,7 @@ class Edge:
                    ComponentParams(int(d.get("data_size", 1 << 14)),
                                    int(d.get("chunk_size", 256)),
                                    int(d.get("parallelism", 1)),
-                                   int(d.get("weight", 1)),
+                                   int(round(float(d.get("weight", 1)))),
                                    dict(d.get("extra", {}))))
 
     # -- static / dynamic split ---------------------------------------------
@@ -215,6 +237,68 @@ class ProxyDAG:
         cached executable without retracing."""
         return tuple(e.dynamic_values() for e in self.edges)
 
+    def canonical_structure_key(self) -> Tuple:
+        """:meth:`structure_key` made stable under isomorphic relabeling.
+
+        Node names are replaced by canonical ids — sources by their
+        sorted-name position (the same index :func:`_init_sources` folds
+        into the rng), edge outputs by first-production order — so two
+        DAGs that differ only in node names share one key.  Equal keys
+        imply bit-identical computation: every rng fold is keyed on the
+        edge index and the sorted source position, both of which the key
+        preserves.  This is what the plan/executable caches key on, so
+        machine-generated structures that are mere relabelings of an
+        already-compiled structure never cost a second compile."""
+        ids: Dict[str, Tuple] = {
+            s: ("s", i) for i, s in enumerate(sorted(self.sources))}
+        nxt = 0
+        entries = []
+        for e in self.edges:
+            srcs = tuple(ids[s] for s in e.src)
+            if e.dst not in ids:
+                ids[e.dst] = ("n", nxt)
+                nxt += 1
+            entries.append((srcs, ids[e.dst], e.structure_key()))
+        return (tuple(int(n) for _, n in sorted(self.sources.items())),
+                tuple(entries),
+                None if self.sink is None else ids.get(self.sink))
+
+    # -- structural invariants (machine-generated structures) ---------------
+
+    def contributing_mask(self) -> List[bool]:
+        """``mask[i]`` — does edge ``i``'s output reach the DAG's output
+        (the sink, or any terminal when no sink is set)?"""
+        outputs = ({self.sink} if self.sink is not None
+                   else set(_terminals(self.edges)))
+        live = set(outputs)
+        mask = [False] * len(self.edges)
+        # walk edges in reverse topological (list) order: an edge is live
+        # when its dst is, and then so are its inputs
+        for i in range(len(self.edges) - 1, -1, -1):
+            if self.edges[i].dst in live:
+                mask[i] = True
+                live.update(self.edges[i].src)
+        return mask
+
+    def validate_structure(self) -> None:
+        """The invariants every machine-generated structure must satisfy,
+        beyond :meth:`validate`'s topological ordering: at least one edge,
+        an output to reduce, and every edge connected to it (a mutation
+        must never leave dead compute the metric vector charges for but
+        the workload semantics cannot justify)."""
+        try:
+            self.validate()
+        except ValueError as e:
+            raise StructureError(str(e)) from e
+        if not self.edges:
+            raise StructureError(f"{self.name}: structure has no edges")
+        dead = [i for i, ok in enumerate(self.contributing_mask()) if not ok]
+        if dead:
+            names = [f"{i}:{self.edges[i].component}" for i in dead[:4]]
+            raise StructureError(
+                f"{self.name}: edges {names} do not reach the "
+                f"{'sink' if self.sink is not None else 'terminals'}")
+
     # -- build (thin shims over the ExecutionPlan lowering pipeline) ---------
 
     def _legacy_plan(self):
@@ -328,3 +412,195 @@ class ProxyDAG:
         from ..api.params import ParamSpace
         space = ParamSpace.from_dag(self)
         return [space.handle(i) for i in range(len(space))]
+
+
+# ---------------------------------------------------------------------------
+# structure mutation primitives (the Fig.-3 design-space moves)
+# ---------------------------------------------------------------------------
+#
+# Each primitive is pure: it returns a NEW ProxyDAG (the input is never
+# touched) that satisfies ``validate_structure`` whenever the input did,
+# or raises StructureError when the requested move is illegal at that
+# site.  The structural search (repro.core.structsearch) composes these
+# into mutation proposals; the primitives themselves are deterministic so
+# a mutation sequence replays identically from a seed.
+
+
+def _copy_edges(edges: Sequence[Edge]) -> List[Edge]:
+    return [Edge(e.component, list(e.src), e.dst,
+                 dataclasses.replace(e.params, extra=dict(e.params.extra)))
+            for e in edges]
+
+
+def fresh_node(dag: ProxyDAG, prefix: str = "m") -> str:
+    """First ``{prefix}{k}`` name unused by any node of ``dag`` —
+    deterministic, so mutated structures serialize reproducibly."""
+    used = set(dag.sources) | {e.dst for e in dag.edges}
+    used.update(s for e in dag.edges for s in e.src)
+    k = 0
+    while f"{prefix}{k}" in used:
+        k += 1
+    return f"{prefix}{k}"
+
+
+def _neighbor_params(e: Edge, component: str, weight: int) -> ComponentParams:
+    """Params for a machine-inserted edge: the neighbouring edge's shape
+    fields (the chain's carry size), no inherited extras — extras encode
+    component-specific semantics the new component may not share."""
+    p = e.params.rounded()
+    return ComponentParams(data_size=p.data_size, chunk_size=p.chunk_size,
+                           parallelism=p.parallelism, weight=int(weight))
+
+
+def insert_edge(dag: ProxyDAG, idx: int, component: str,
+                weight: int = 1) -> ProxyDAG:
+    """Splice a new ``component`` edge into edge ``idx``'s input chain:
+    the new edge reads edge ``idx``'s (single) input and edge ``idx`` is
+    rewired to read the new intermediate node instead."""
+    get_component(component)                 # unknown names fail fast
+    e = dag.edges[idx]
+    if len(e.src) != 1:
+        raise StructureError(
+            f"insert_edge: edge {idx} ({e.component}) has {len(e.src)} "
+            f"inputs; splicing needs a single-input edge")
+    mid = fresh_node(dag)
+    edges = _copy_edges(dag.edges)
+    edges[idx] = Edge(e.component, [mid], e.dst,
+                      dataclasses.replace(e.params,
+                                          extra=dict(e.params.extra)))
+    new = Edge(component, list(e.src), mid,
+               _neighbor_params(e, component, weight))
+    edges.insert(idx, new)
+    out = ProxyDAG(dag.name, dict(dag.sources), edges, dag.sink)
+    out.validate_structure()
+    return out
+
+
+def insert_accumulating_edge(dag: ProxyDAG, src: str, dst_idx: int,
+                             component: str, weight: int = 1) -> ProxyDAG:
+    """Add a new ``component`` edge accumulating into edge ``dst_idx``'s
+    output node (shared-dst addition, the DAG's join semantics), placed
+    right after that producer so every downstream consumer sees the
+    contribution.  ``src`` must be a node defined before the insertion
+    point."""
+    get_component(component)
+    e = dag.edges[dst_idx]
+    defined = set(dag.sources)
+    for prior in dag.edges[: dst_idx + 1]:
+        defined.add(prior.dst)
+    if src not in defined:
+        raise StructureError(
+            f"insert_accumulating_edge: node {src!r} is not defined at "
+            f"edge {dst_idx}")
+    edges = _copy_edges(dag.edges)
+    edges.insert(dst_idx + 1,
+                 Edge(component, [src], e.dst,
+                      _neighbor_params(e, component, weight)))
+    out = ProxyDAG(dag.name, dict(dag.sources), edges, dag.sink)
+    out.validate_structure()
+    return out
+
+
+def remove_edge(dag: ProxyDAG, idx: int) -> ProxyDAG:
+    """Delete edge ``idx``.  An accumulating edge (its dst has another
+    producer) simply drops; otherwise its consumers are bypassed onto the
+    edge's first input (and the sink re-points likewise), so the DAG
+    stays connected."""
+    if len(dag.edges) <= 1:
+        raise StructureError("remove_edge: structure has only one edge")
+    e = dag.edges[idx]
+    others = [o for j, o in enumerate(dag.edges) if j != idx]
+    edges = _copy_edges(others)
+    sink = dag.sink
+    if not any(o.dst == e.dst for o in others):
+        # sole producer: bypass consumers (and the sink) onto its input
+        repl = e.src[0]
+        for o in edges:
+            o.src = [repl if s == e.dst else s for s in o.src]
+        if sink == e.dst:
+            sink = repl
+        if sink is not None and sink not in set(dag.sources) | {
+                o.dst for o in edges}:
+            raise StructureError(
+                f"remove_edge: removing edge {idx} orphans sink {sink!r}")
+    out = ProxyDAG(dag.name, dict(dag.sources), edges, sink)
+    out.validate_structure()
+    return out
+
+
+def swap_component(dag: ProxyDAG, idx: int, component: str) -> ProxyDAG:
+    """Replace edge ``idx``'s dwarf component, keeping topology and shape
+    params.  Extras are dropped: they parameterize the *old* component's
+    semantics (hash rounds, histogram bins) and stale keys would leak
+    into the new edge's static structure key."""
+    get_component(component)
+    e = dag.edges[idx]
+    if component == e.component:
+        raise StructureError(f"swap_component: edge {idx} already is "
+                             f"{component!r}")
+    edges = _copy_edges(dag.edges)
+    edges[idx] = Edge(component, list(e.src), e.dst,
+                      _neighbor_params(e, component,
+                                       e.params.rounded().weight))
+    out = ProxyDAG(dag.name, dict(dag.sources), edges, dag.sink)
+    out.validate_structure()
+    return out
+
+
+def split_edge(dag: ProxyDAG, idx: int, first_weight: int) -> ProxyDAG:
+    """Split edge ``idx`` (weight ``w >= 2``) into a chain of two
+    same-component edges with weights ``first_weight`` and
+    ``w - first_weight`` through a fresh intermediate node — the inverse
+    of :func:`merge_chain`, and the move that exposes a chain position
+    for a later :func:`swap_component`."""
+    e = dag.edges[idx]
+    w = e.params.rounded().weight
+    first_weight = int(first_weight)
+    if w < 2 or not 0 < first_weight < w:
+        raise StructureError(
+            f"split_edge: edge {idx} weight {w} cannot split at "
+            f"{first_weight}")
+    mid = fresh_node(dag)
+    edges = _copy_edges(dag.edges)
+    edges[idx] = Edge(e.component, [mid], e.dst,
+                      dataclasses.replace(
+                          e.params, weight=w - first_weight,
+                          extra=dict(e.params.extra)))
+    edges.insert(idx, Edge(e.component, list(e.src), mid,
+                           dataclasses.replace(
+                               e.params, weight=first_weight,
+                               extra=dict(e.params.extra))))
+    out = ProxyDAG(dag.name, dict(dag.sources), edges, dag.sink)
+    out.validate_structure()
+    return out
+
+
+def merge_chain(dag: ProxyDAG, idx: int) -> ProxyDAG:
+    """Merge edges ``idx`` and ``idx + 1`` — a private same-component
+    chain — into one edge with the summed weight."""
+    if idx + 1 >= len(dag.edges):
+        raise StructureError(f"merge_chain: no edge after {idx}")
+    a, b = dag.edges[idx], dag.edges[idx + 1]
+    consumers = [j for j, o in enumerate(dag.edges)
+                 for s in o.src if s == a.dst]
+    mergeable = (a.component == b.component
+                 and list(b.src) == [a.dst]
+                 and consumers == [idx + 1]
+                 and sum(1 for o in dag.edges if o.dst == a.dst) == 1
+                 and a.dst not in dag.sources and a.dst != dag.sink
+                 and a.structure_key() == b.structure_key())
+    if not mergeable:
+        raise StructureError(
+            f"merge_chain: edges {idx},{idx + 1} are not a private "
+            f"same-structure chain")
+    edges = _copy_edges(dag.edges)
+    merged = Edge(a.component, list(a.src), b.dst,
+                  dataclasses.replace(
+                      b.params,
+                      weight=a.params.rounded().weight
+                      + b.params.rounded().weight,
+                      extra=dict(b.params.extra)))
+    edges[idx: idx + 2] = [merged]
+    out = ProxyDAG(dag.name, dict(dag.sources), edges, dag.sink)
+    out.validate_structure()
+    return out

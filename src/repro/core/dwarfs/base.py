@@ -32,13 +32,18 @@ class ComponentParams:
         return dataclasses.replace(self, **kw)
 
     def rounded(self) -> "ComponentParams":
-        """Clamp/round to legal values (tuner moves in continuous space)."""
+        """Clamp/round to legal values (tuner moves in continuous space).
+
+        ``weight`` rounds to nearest — the same coercion the dynamic-param
+        path applies (``dag._INT_DYNAMIC`` scalars go through
+        ``int(round(...))``), so a fractional tuner weight executes and
+        serializes identically."""
         data_size = int(max(256, min(self.data_size, 1 << 26)))
         chunk = int(max(8, min(self.chunk_size, data_size)))
         # keep chunks lane-friendly (multiples of 8; TPU-sublane aligned)
         chunk = max(8, (chunk // 8) * 8)
         par = int(max(1, min(self.parallelism, 256)))
-        weight = int(max(0, min(self.weight, 128)))
+        weight = int(round(max(0.0, min(float(self.weight), 128.0))))
         data_size = max(chunk, (data_size // chunk) * chunk)
         return ComponentParams(data_size, chunk, par, weight, dict(self.extra))
 

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -150,26 +150,45 @@ def _finalize_report(n: int) -> CostReport:
     return rep
 
 
-def _sink_sizes(dag: ProxyDAG) -> int:
+def _sink_sizes_from(sources: Dict[str, int], edges, sink) -> int:
     """Element count feeding the final reduction(s)."""
-    sizes = {name: int(n) for name, n in dag.sources.items()}
-    for e in dag.edges:
+    sizes = {name: int(n) for name, n in sources.items()}
+    for e in edges:
         sizes[e.dst] = e.params.rounded().data_size
-    if dag.sink is not None:
-        return sizes.get(dag.sink, 1)
-    return sum(sizes.get(t, 1) for t in _terminals(dag.edges))
+    if sink is not None:
+        return sizes.get(sink, 1)
+    return sum(sizes.get(t, 1) for t in _terminals(list(edges)))
+
+
+def _sink_sizes(dag: ProxyDAG) -> int:
+    return _sink_sizes_from(dag.sources, dag.edges, dag.sink)
+
+
+def _assemble_report(sources: Dict[str, int], edges, sink) -> CostReport:
+    total = CostReport()
+    total.add(_sources_report(tuple(sorted(sources.items()))))
+    for e in edges:
+        w = float(e.params.rounded().weight)
+        if w > 0:
+            total.add(_body_report(e), mult=w)
+    total.add(_finalize_report(_sink_sizes_from(sources, edges, sink)))
+    return total
 
 
 def structural_report(dag: ProxyDAG) -> CostReport:
     """Whole-proxy cost report assembled from cached per-edge pieces."""
-    total = CostReport()
-    total.add(_sources_report(tuple(sorted(dag.sources.items()))))
-    for e in dag.edges:
-        w = float(e.params.rounded().weight)
-        if w > 0:
-            total.add(_body_report(e), mult=w)
-    total.add(_finalize_report(_sink_sizes(dag)))
-    return total
+    return _assemble_report(dag.sources, dag.edges, dag.sink)
+
+
+def measure_plan(plan, host_bytes: float = 0.0) -> Dict[str, float]:
+    """The compositional metric vector straight from an
+    :class:`~repro.core.schedule.ExecutionPlan` — no ProxyDAG rebuild, no
+    stack, no execution.  The plan's rounded lowering-time edges carry
+    everything the cost model needs, so a structural search can score
+    candidate plans as pure IR."""
+    return metric_vector(
+        _assemble_report(plan.sources, plan.edges, plan.sink),
+        host_bytes=host_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -336,6 +355,112 @@ def measure_population(dag: ProxyDAG, space, matrix,
 
 
 # ---------------------------------------------------------------------------
+# structure measurement (mutation-delta scoring)
+# ---------------------------------------------------------------------------
+
+
+def _edge_vec(e) -> np.ndarray:
+    """One edge's weighted contribution to the flat channel basis."""
+    w = float(e.params.rounded().weight)
+    if w <= 0:
+        return np.zeros(len(_BASIS_FIELDS) + 1, np.float64)
+    return w * _report_to_vec(_body_report(e))
+
+
+def _dag_score_key(dag: ProxyDAG) -> Tuple:
+    """Cache key of a dag's *compositional score*: the canonical structure
+    plus every dynamic value (weights, extras) — two dags share a score
+    vector only when they are relabelings with identical parameters."""
+    dyn = tuple(
+        tuple(sorted(
+            (k, int(round(float(v))) if k in _INT_DYNAMIC else float(v))
+            for k, v in (
+                (f, e.params.rounded().weight if f == "weight"
+                 else e.params.rounded().extra[f])
+                for f in e.dynamic_fields())))
+        for e in dag.edges)
+    return (dag.canonical_structure_key(), dyn)
+
+
+class StructureScorer:
+    """Compositional scorer over *structures* — the outer-loop counterpart
+    of :class:`PopulationScorer` (which scores weight candidates of one
+    structure).
+
+    Whole-structure reports are cached as flat channel vectors keyed on
+    the canonical structure *plus* every dynamic value (weights change the
+    score but not the structure), and a mutated child scores as a
+    **delta** from its parent's cached vector:
+
+        child = parent - Σ removed (weight × body) + Σ added (weight × body)
+                ± the finalize-size correction
+
+    so scoring ``m`` mutations of one parent costs ``O(Σ |edit|)`` cached
+    body lookups rather than ``m`` full DAG walks — and *zero* compiles or
+    traces when every (component, shape) involved has already been
+    analyzed.  ``new_compiles`` counts the body analyses a scoring run did
+    trigger (a structure introducing a never-profiled component pays
+    exactly one)."""
+
+    def __init__(self, host_bytes: float = 0.0):
+        self.host_bytes = host_bytes
+        self._vecs: Dict[Tuple, np.ndarray] = {}
+        self._compiles0 = _STATS["compiles"]
+
+    @property
+    def new_compiles(self) -> int:
+        """Body analyses triggered since this scorer was constructed."""
+        return _STATS["compiles"] - self._compiles0
+
+    def structures_cached(self) -> int:
+        return len(self._vecs)
+
+    def _vec(self, dag: ProxyDAG) -> np.ndarray:
+        key = _dag_score_key(dag)
+        vec = self._vecs.get(key)
+        if vec is None:
+            vec = _report_to_vec(structural_report(dag))
+            self._vecs[key] = vec
+        return vec
+
+    def score(self, dag: ProxyDAG) -> Dict[str, float]:
+        """Metric vector of ``dag`` (``measure(execute=False)``-identical
+        keys), cached per canonical structure."""
+        return metric_vector(_vec_to_report(self._vec(dag).copy()),
+                             host_bytes=self.host_bytes)
+
+    def score_child(self, parent: ProxyDAG, child: ProxyDAG,
+                    removed: Sequence = (), added: Sequence = ()
+                    ) -> Dict[str, float]:
+        """Score ``child`` as a mutation delta from ``parent``.
+
+        ``removed`` are the *parent* edges the mutation dropped and
+        ``added`` the edges it introduced (a rewired-only edge — src
+        renames — appears in neither: node names do not enter the body
+        cost).  Falls back to a full assembly when the mutation touched
+        the sources.  The resulting vector is cached under the child's
+        canonical key, so it can seed further delta scoring."""
+        key = _dag_score_key(child)
+        vec = self._vecs.get(key)
+        if vec is None:
+            if dict(parent.sources) != dict(child.sources):
+                return self.score(child)
+            vec = self._vec(parent).copy()
+            for e in removed:
+                vec -= _edge_vec(e)
+            for e in added:
+                vec += _edge_vec(e)
+            fin_p = _sink_sizes(parent)
+            fin_c = _sink_sizes(child)
+            if fin_p != fin_c:
+                vec -= _report_to_vec(_finalize_report(fin_p))
+                vec += _report_to_vec(_finalize_report(fin_c))
+            self._vecs[key] = vec
+        return metric_vector(_vec_to_report(vec.copy()),
+                             host_bytes=self.host_bytes)
+
+
+# ---------------------------------------------------------------------------
 # cached execution (rate metrics)
 # ---------------------------------------------------------------------------
 
@@ -343,8 +468,10 @@ def measure_population(dag: ProxyDAG, space, matrix,
 def executable(dag: ProxyDAG) -> Callable[[jax.Array], Any]:
     """Cached compiled runner for ``dag``: ``fn(rng) -> scalar`` binding the
     dag's *current* dynamic params as jitted arguments.  One compile per
-    structure key; stepping weights/extras re-uses the executable."""
-    key = dag.structure_key()
+    *canonical* structure key (stable under node relabeling, so
+    machine-generated isomorphic structures share the compile); stepping
+    weights/extras re-uses the executable."""
+    key = dag.canonical_structure_key()
     jfn = _EXEC_CACHE.get(key)
     if jfn is None:
         _STATS["exec_compiles"] += 1
@@ -374,7 +501,7 @@ def measure(dag: ProxyDAG, execute: bool = False, exec_iters: int = 1,
     report = structural_report(dag)
     exec_s = 0.0
     if execute:
-        cold = dag.structure_key() not in _EXEC_CACHE
+        cold = dag.canonical_structure_key() not in _EXEC_CACHE
         fn = executable(dag)
         rng = jax.random.PRNGKey(0)
         if cold:                             # exclude compile from the timing

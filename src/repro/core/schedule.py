@@ -33,7 +33,9 @@ them uniformly.  :func:`lower` turns a DAG into an
   ``(plan.structure_key(), bucket_size)`` stays constant across sweeps:
   zero retraces, at most one executable per bucket signature.
 
-The plan cache is keyed on ``(dag.structure_key(), threshold)``: fusion
+The plan cache is keyed on ``(dag.canonical_structure_key(), threshold)``
+(stable under isomorphic node relabeling — machine-generated structures
+that only rename nodes share plans and executables): fusion
 grouping is decided from the weights seen at first lowering and then
 *reused* for every dynamic-param setting of the structure (grouping is
 correctness-neutral; re-lowering per weight step would break the
@@ -361,7 +363,11 @@ class ExecutionPlan:
     drop-in replacements for the legacy parametric fns.
     """
 
-    dag_key: Tuple                 # ProxyDAG.structure_key() at lowering
+    dag_key: Tuple                 # ProxyDAG.canonical_structure_key() at
+                                   # lowering: stable under isomorphic node
+                                   # relabeling, so a mutated structure that
+                                   # merely renames nodes re-uses every plan
+                                   # and downstream stack executable
     sources: Dict[str, int]
     sink: Optional[str]
     edges: List[Edge]              # rounded edge copies (lowering-time params)
@@ -561,7 +567,7 @@ def clear_plan_cache() -> None:
 def _lower(dag: ProxyDAG, threshold: float) -> ExecutionPlan:
     dag.validate()
     edges = dag._rounded_edges()
-    return ExecutionPlan(dag_key=dag.structure_key(),
+    return ExecutionPlan(dag_key=dag.canonical_structure_key(),
                          sources=dict(dag.sources),
                          sink=dag.sink,
                          edges=edges,
@@ -594,6 +600,6 @@ def lower(dag: ProxyDAG, threshold: Optional[float] = None,
     thr = fusion_threshold() if threshold is None else float(threshold)
     if not cache:
         return _lower(dag, thr)
-    key = (dag.structure_key(), thr)
+    key = (dag.canonical_structure_key(), thr)
     return cached_get(_PLAN_CACHE, key, lambda: _lower(dag, thr),
                       _PLAN_STATS, _PLAN_CACHE_CAP)

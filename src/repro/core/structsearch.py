@@ -1,0 +1,573 @@
+"""Structural population search over the Fig.-3 DAG design space.
+
+The paper defines a proxy benchmark as a *DAG-like combination of dwarf
+components with different weights* (Fig. 3) — but the population tuner
+(:class:`~repro.core.autotune.PopulationTuner`) searches only the weights
+and dynamic params under one frozen structure.  Gao et al. (Data Dwarfs,
+2018) and Jia et al. (Characterizing and Subsetting, 2014) both show the
+*composition* of the units of computation, not just their intensities, is
+what discriminates workloads — so this module treats the DAG itself as the
+search variable:
+
+* **Mutation primitives** (:mod:`repro.core.dag`): edge insertion
+  (splicing into a chain, or accumulating into a join node), edge
+  removal with consumer bypass, component swaps, and split/merge of
+  same-component chains.  Every primitive preserves the structural
+  invariants (`validate_structure`): topologically ordered, acyclic,
+  every edge connected to the sink.
+* **Cheap structural scoring** (:class:`~repro.core.engine.StructureScorer`):
+  candidate structures score through the compositional cost model —
+  per-edge body reports are cached by component structure key, and a
+  mutated child scores as a *delta* from its parent's cached vector, so
+  most mutated structures score with **zero new traces or compiles**.
+* **Inner weight loop**: only the surviving elite structures earn a
+  :class:`~repro.core.autotune.PopulationTuner` run over their dynamic
+  leaves; a single total candidate budget is split between the two loops
+  (:func:`~repro.core.autotune.split_budget`).
+
+The search is deterministic for a fixed seed: mutation proposals replay
+from ``np.random.RandomState``, structures deduplicate on
+``canonical_structure_key`` (stable under node relabeling), and scoring is
+pure arithmetic over cached HLO reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .autotune import (DEFAULT_METRICS, DEFAULT_STRUCTURE_BUDGET_FRAC,
+                       DEFAULT_WEIGHTS, PopulationTuner, _deviations,
+                       split_budget)
+from .dag import (Edge, ProxyDAG, StructureError, _neighbor_params,
+                  insert_accumulating_edge, insert_edge, merge_chain,
+                  remove_edge, split_edge, swap_component)
+from .engine import (_BASIS_FIELDS, StructureScorer, _body_report,
+                     _report_to_vec)
+from .metrics import vector_accuracy
+from .proxy import ProxyBenchmark
+
+# ---------------------------------------------------------------------------
+# guided component choice (impact analysis over the channel basis)
+# ---------------------------------------------------------------------------
+
+#: mix metric -> flat-basis channel field (mirrors ``metrics.elem_channels``)
+_MIX_CHANNEL: Dict[str, str] = {
+    "mix_dot": "flops",
+    "mix_elementwise": "elementwise_elems",
+    "mix_reduce": "reduce_elems",
+    "mix_gather_scatter": "gather_elems",
+    "mix_sort": "sort_elems",
+    "mix_fft": "fft_elems",
+    "mix_rng": "rng_elems",
+    "mix_logic": "logic_elems",
+    "mix_compare_select": "compare_elems",
+}
+
+_CHANNEL_IDX = {f: i for i, f in enumerate(_BASIS_FIELDS)}
+_ELEM_FIELDS = ("elementwise_elems", "reduce_elems", "gather_elems",
+                "sort_elems", "fft_elems", "rng_elems", "logic_elems",
+                "compare_elems")
+
+
+def deficit_channel(target: Dict[str, float], metrics: Dict[str, float],
+                    keys: Sequence[str], margin: float = 0.02
+                    ) -> Optional[str]:
+    """The basis channel the proxy most under-supplies vs the target (in
+    mix share points), or ``None`` when every mix share is close — the
+    guidance signal for mutation proposals: a missing channel can only be
+    created by *structure*, never by re-weighting edges that lack it."""
+    best, gap = None, margin
+    for k in keys:
+        field = _MIX_CHANNEL.get(k)
+        if field is None:
+            continue
+        g = target.get(k, 0.0) - metrics.get(k, 0.0)
+        if g > gap:
+            best, gap = field, g
+    return best
+
+
+def _channel_share(vec: np.ndarray, field: str) -> float:
+    """Share of a body vector's element-op work on ``field`` (dot counts
+    as flops/2, matching ``metrics.elem_channels``)."""
+    def chan(f: str) -> float:
+        v = float(vec[_CHANNEL_IDX[f]])
+        return v / 2.0 if f == "flops" else v
+    total = chan("flops") + sum(chan(f) for f in _ELEM_FIELDS)
+    return chan(field) / max(total, 1.0)
+
+
+def _component_channel_share(component: str, site: Edge,
+                             field: str) -> float:
+    """How strongly one repeat of ``component`` (at the mutation site's
+    shape params) feeds ``field`` — from the engine's cached body reports,
+    so repeated guidance queries compile nothing new.  A failing probe
+    propagates: the pool is validated against the registry up front
+    (:func:`validate_components`), so an error here is a real analysis
+    bug, not a bad component name to paper over."""
+    probe = Edge(component, ["x"], "y", _neighbor_params(site, component, 1))
+    return _channel_share(_report_to_vec(_body_report(probe)), field)
+
+
+def validate_components(components: Sequence[str]) -> List[str]:
+    """Resolve every pool name against the dwarf registry (``KeyError``
+    with the known names on a typo) — a silent bad name would otherwise
+    only surface as guidance quietly degrading to uniform draws."""
+    from .dwarfs import get_component
+    for c in components:
+        get_component(c)
+    return list(components)
+
+
+# ---------------------------------------------------------------------------
+# mutation proposals
+# ---------------------------------------------------------------------------
+
+#: proposal kinds and their draw probabilities (insertions lead: they are
+#: the only moves that can create a missing channel)
+MUTATION_KINDS: Tuple[Tuple[str, float], ...] = (
+    ("insert", 0.30),
+    ("swap", 0.25),
+    ("insert_accumulate", 0.15),
+    ("remove", 0.15),
+    ("split", 0.10),
+    ("merge", 0.05),
+)
+
+#: probability that an insert/swap follows the deficit-channel guidance
+#: instead of drawing its component uniformly
+GUIDED_FRAC = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class Mutation:
+    """One applied structure mutation, with the edit set delta scoring
+    needs: ``removed`` are parent edges the move dropped, ``added`` the
+    child edges it introduced (rewired-only edges appear in neither —
+    node renames do not change body cost)."""
+
+    kind: str
+    detail: str
+    removed: Tuple[Edge, ...] = ()
+    added: Tuple[Edge, ...] = ()
+
+
+def _draw_kind(rs: np.random.RandomState) -> str:
+    r = rs.rand()
+    acc = 0.0
+    for kind, p in MUTATION_KINDS:
+        acc += p
+        if r < acc:
+            return kind
+    return MUTATION_KINDS[0][0]
+
+
+def _choose_component(site: Edge, rs: np.random.RandomState,
+                      components: Sequence[str],
+                      bias: Optional[str]) -> Optional[str]:
+    pool = [c for c in components if c != site.component]
+    if not pool:
+        return None
+    if bias is not None and rs.rand() < GUIDED_FRAC:
+        shares = [(c, _component_channel_share(c, site, bias)) for c in pool]
+        best = max(shares, key=lambda cs: cs[1])
+        if best[1] > 0.0:
+            return best[0]
+    return pool[rs.randint(len(pool))]
+
+
+def propose_mutation(dag: ProxyDAG, rs: np.random.RandomState,
+                     components: Sequence[str],
+                     bias: Optional[str] = None,
+                     max_tries: int = 8
+                     ) -> Optional[Tuple[ProxyDAG, Mutation]]:
+    """Draw one valid structure mutation of ``dag``, or ``None`` when
+    ``max_tries`` draws found no legal site.  Deterministic in ``rs``."""
+    validate_components(components)
+    n = len(dag.edges)
+    for _ in range(max_tries):
+        kind = _draw_kind(rs)
+        try:
+            if kind == "insert":
+                sites = [i for i, e in enumerate(dag.edges)
+                         if len(e.src) == 1]
+                if not sites:
+                    continue
+                i = sites[rs.randint(len(sites))]
+                comp = _choose_component(dag.edges[i], rs, components, bias)
+                if comp is None:
+                    continue
+                w = 1 + rs.randint(4)
+                child = insert_edge(dag, i, comp, weight=w)
+                return child, Mutation(
+                    "insert", f"insert {comp}(w={w}) before e{i}",
+                    added=(child.edges[i],))
+            if kind == "insert_accumulate":
+                i = rs.randint(n)
+                defined = sorted(set(dag.sources)
+                                 | {e.dst for e in dag.edges[: i + 1]})
+                src = defined[rs.randint(len(defined))]
+                comp = _choose_component(dag.edges[i], rs, components, bias)
+                if comp is None:
+                    continue
+                child = insert_accumulating_edge(dag, src, i, comp, weight=1)
+                return child, Mutation(
+                    "insert_accumulate",
+                    f"accumulate {comp}({src}) into e{i}.dst",
+                    added=(child.edges[i + 1],))
+            if kind == "swap":
+                i = rs.randint(n)
+                comp = _choose_component(dag.edges[i], rs, components, bias)
+                if comp is None:
+                    continue
+                child = swap_component(dag, i, comp)
+                return child, Mutation(
+                    "swap", f"swap e{i}:{dag.edges[i].component}->{comp}",
+                    removed=(dag.edges[i],), added=(child.edges[i],))
+            if kind == "remove":
+                i = rs.randint(n)
+                child = remove_edge(dag, i)
+                return child, Mutation(
+                    "remove", f"remove e{i}:{dag.edges[i].component}",
+                    removed=(dag.edges[i],))
+            if kind == "split":
+                sites = [i for i, e in enumerate(dag.edges)
+                         if e.params.rounded().weight >= 2]
+                if not sites:
+                    continue
+                i = sites[rs.randint(len(sites))]
+                w = dag.edges[i].params.rounded().weight
+                w1 = 1 + rs.randint(w - 1)
+                child = split_edge(dag, i, w1)
+                return child, Mutation(
+                    "split", f"split e{i}:{dag.edges[i].component} at {w1}",
+                    removed=(dag.edges[i],),
+                    added=(child.edges[i], child.edges[i + 1]))
+            if kind == "merge":
+                i = rs.randint(max(n - 1, 1))
+                child = merge_chain(dag, i)
+                return child, Mutation(
+                    "merge", f"merge e{i}+e{i + 1}:{dag.edges[i].component}",
+                    removed=(dag.edges[i], dag.edges[i + 1]),
+                    added=(child.edges[i],))
+        except StructureError:
+            continue
+    return None
+
+
+# ---------------------------------------------------------------------------
+# the structural tuner
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StructureCandidate:
+    """One structure in the outer population."""
+
+    dag: ProxyDAG
+    metrics: Dict[str, float]
+    accuracy: float
+    worst_dev: float
+    lineage: str                  # mutation trail from its seed structure
+    tuned: bool = False           # has the inner weight loop run on it?
+
+
+@dataclasses.dataclass
+class StructureGeneration:
+    """One outer-loop generation's summary."""
+
+    index: int
+    proposed: int                 # mutation draws attempted
+    scored: int                   # new (deduped, valid) structures scored
+    tuned_elites: int             # elites the inner weight loop ran on
+    best_accuracy: float
+    best_deviation: float
+    best_lineage: str
+    structure_candidates: int     # cumulative structure-budget spend
+    weight_candidates: int        # cumulative inner-loop spend
+
+
+@dataclasses.dataclass
+class StructuralTuneResult:
+    proxy: ProxyBenchmark
+    converged: bool
+    generations: int
+    structures_scored: int        # distinct structures scored (outer spend)
+    weight_candidates: int        # inner PopulationTuner spend
+    candidates_evaluated: int     # total = structures + weight candidates
+    initial_accuracy: Dict[str, float]
+    final_accuracy: Dict[str, float]
+    final_deviation: float
+    best_lineage: str
+    new_body_compiles: int        # HLO analyses the search itself triggered
+    history: List[StructureGeneration]
+
+    def summary(self) -> str:
+        rows = [f"structural_tune[{self.proxy.name}]: "
+                f"converged={self.converged} gens={self.generations} "
+                f"structures={self.structures_scored} "
+                f"weight_candidates={self.weight_candidates} "
+                f"avg_acc {self.initial_accuracy.get('avg', 0):.3f} -> "
+                f"{self.final_accuracy.get('avg', 0):.3f} "
+                f"worst_dev {self.final_deviation:+.3f} "
+                f"via [{self.best_lineage}]"]
+        for g in self.history:
+            rows.append(
+                f"  gen{g.index:02d} scored={g.scored}/{g.proposed} "
+                f"tuned={g.tuned_elites} best_acc={g.best_accuracy:.3f} "
+                f"worst_dev={g.best_deviation:+.3f} [{g.best_lineage}]")
+        return "\n".join(rows)
+
+
+class StructuralTuner:
+    """Evolutionary search over DAG *structures*, wrapping
+    :class:`~repro.core.autotune.PopulationTuner` as the inner weight/param
+    loop — together they tune the full Fig.-3 design space.
+
+    Each outer generation mutates the elite structures
+    (``mutations_per_parent`` proposals each, guided toward the target's
+    most under-supplied mix channel), deduplicates on the canonical
+    structure key, scores survivors through the compositional
+    :class:`~repro.core.engine.StructureScorer` (delta scoring — zero
+    compiles when every component/shape was already profiled), and then
+    spends a slice of the weight budget running the population tuner on
+    the top ``elites`` structures.  ``max_candidates`` bounds the *total*
+    spend: ``structure_budget_frac`` of it funds structure scoring, the
+    rest the inner weight generations — the knob that makes a fair fight
+    against a weight-only tuner under the same budget.
+    """
+
+    def __init__(self, target_metrics: Dict[str, float],
+                 metric_keys: Sequence[str] = DEFAULT_METRICS,
+                 tol: float = 0.15,
+                 structure_population: int = 8,
+                 generations: int = 4,
+                 mutations_per_parent: int = 4,
+                 elites: int = 2,
+                 max_candidates: int = 256,
+                 structure_budget_frac: float = DEFAULT_STRUCTURE_BUDGET_FRAC,
+                 components: Optional[Sequence[str]] = None,
+                 seed_structures: Optional[Sequence[ProxyDAG]] = None,
+                 inner_population: int = 8,
+                 execute: bool = False,
+                 stack: str = "openmp",
+                 seed: int = 0,
+                 weights: Optional[Dict[str, float]] = None):
+        self.target = target_metrics
+        self.keys = [k for k in metric_keys
+                     if abs(target_metrics.get(k, 0.0)) > 1e-12]
+        self.tol = tol
+        self.structure_population = max(2, int(structure_population))
+        self.generations = max(1, int(generations))
+        self.mutations_per_parent = max(1, int(mutations_per_parent))
+        self.elites = max(1, int(elites))
+        self.max_candidates = max(2, int(max_candidates))
+        self.structure_budget, self.weight_budget = split_budget(
+            self.max_candidates, structure_budget_frac)
+        # the input structure itself is always scored
+        self.structure_budget = max(1, self.structure_budget)
+        self.components = (None if components is None
+                           else sorted(components))
+        self.seed_structures = list(seed_structures or [])
+        self.inner_population = max(2, int(inner_population))
+        self.execute = execute
+        self.stack = stack
+        self.seed = seed
+        self.weights = dict(DEFAULT_WEIGHTS) if weights is None else weights
+        self.structures_scored = 0
+        self.weight_candidates = 0
+
+    # -- scoring --------------------------------------------------------------
+
+    def _accuracy(self, metrics: Dict[str, float]) -> float:
+        return vector_accuracy(self.target, metrics, self.keys,
+                               self.weights)["avg"]
+
+    def _worst_dev(self, metrics: Dict[str, float]) -> float:
+        devs = _deviations(self.target, metrics, self.keys)
+        return max((abs(d) for d in devs.values()), default=math.inf)
+
+    def _candidate(self, dag: ProxyDAG, metrics: Dict[str, float],
+                   lineage: str) -> StructureCandidate:
+        return StructureCandidate(dag, metrics, self._accuracy(metrics),
+                                  self._worst_dev(metrics), lineage)
+
+    # -- inner weight loop ----------------------------------------------------
+
+    def _weight_slice(self) -> int:
+        """Per-elite inner-loop budget: the weight share spread evenly
+        over every (generation, elite) slot."""
+        slots = self.generations * self.elites
+        return self.weight_budget // max(slots, 1)
+
+    def _tune_weights(self, scorer: StructureScorer,
+                      cand: StructureCandidate, gen: int) -> None:
+        # the total-spend clamp keeps max_candidates a hard bound even
+        # when __init__ bumped structure_budget to cover the mandatory
+        # input-structure score
+        budget = min(self._weight_slice(),
+                     self.weight_budget - self.weight_candidates,
+                     self.max_candidates - self.structures_scored
+                     - self.weight_candidates)
+        if budget < self.inner_population:
+            return
+        inner = PopulationTuner(
+            self.target, metric_keys=self.keys, tol=self.tol,
+            population=self.inner_population,
+            generations=max(1, budget // self.inner_population),
+            max_candidates=budget, seed=self.seed + 7919 * gen,
+            stack=self.stack, execute=self.execute, weights=self.weights)
+        res = inner.tune(ProxyBenchmark(cand.dag))
+        self.weight_candidates += res.candidates_evaluated
+        cand.dag = res.proxy.dag
+        cand.metrics = scorer.score(cand.dag)
+        cand.accuracy = self._accuracy(cand.metrics)
+        cand.worst_dev = self._worst_dev(cand.metrics)
+        cand.tuned = True
+
+    # -- main loop ------------------------------------------------------------
+
+    def tune(self, proxy: ProxyBenchmark) -> StructuralTuneResult:
+        proxy = proxy.clone()
+        self.structures_scored = 0
+        self.weight_candidates = 0
+        scorer = StructureScorer()
+        components = self.components
+        if components is None:
+            components = sorted({e.component for e in proxy.dag.edges}
+                                | {e.component for d in self.seed_structures
+                                   for e in d.edges})
+        validate_components(components)
+
+        seen = set()
+        pool: List[StructureCandidate] = []
+        for i, dag in enumerate([proxy.dag] + self.seed_structures):
+            key = dag.canonical_structure_key()
+            if key in seen or (pool and self.structures_scored
+                               >= self.structure_budget):
+                continue
+            seen.add(key)
+            dag.validate_structure()
+            metrics = scorer.score(dag)
+            self.structures_scored += 1
+            pool.append(self._candidate(
+                dag, metrics, "start" if i == 0 else f"seed{i}"))
+        init_acc = vector_accuracy(self.target, pool[0].metrics, self.keys,
+                                   self.weights)
+        best = max(pool, key=lambda c: c.accuracy)
+        history: List[StructureGeneration] = []
+        for gen in range(1, self.generations + 1):
+            if best.worst_dev <= self.tol:
+                break
+            rs = np.random.RandomState(self.seed + 104729 * gen)
+            bias = deficit_channel(self.target, best.metrics, self.keys)
+            parents = sorted(pool, key=lambda c: -c.accuracy)[: self.elites]
+            proposed = scored = 0
+            fresh: List[StructureCandidate] = []
+            for parent in parents:
+                for _ in range(self.mutations_per_parent):
+                    if self.structures_scored >= self.structure_budget:
+                        break
+                    got = propose_mutation(parent.dag, rs, components, bias)
+                    proposed += 1
+                    if got is None:
+                        continue
+                    child, mut = got
+                    key = child.canonical_structure_key()
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    metrics = scorer.score_child(parent.dag, child,
+                                                 mut.removed, mut.added)
+                    self.structures_scored += 1
+                    scored += 1
+                    fresh.append(self._candidate(
+                        child, metrics,
+                        (mut.detail if parent.lineage == "start"
+                         else f"{parent.lineage}; {mut.detail}")))
+            pool = sorted(pool + fresh,
+                          key=lambda c: -c.accuracy)[: self.structure_population]
+            tuned = 0
+            for cand in pool[: self.elites]:
+                if cand.tuned:
+                    # an elite that already ran its inner loop keeps its
+                    # tuned weights; the slice stays banked for elites
+                    # that newly survived into the front
+                    continue
+                before = self.weight_candidates
+                self._tune_weights(scorer, cand, gen)
+                tuned += int(self.weight_candidates > before)
+            pool.sort(key=lambda c: -c.accuracy)
+            if pool[0].accuracy > best.accuracy:
+                best = pool[0]
+            history.append(StructureGeneration(
+                index=gen, proposed=proposed, scored=scored,
+                tuned_elites=tuned, best_accuracy=best.accuracy,
+                best_deviation=best.worst_dev, best_lineage=best.lineage,
+                structure_candidates=self.structures_scored,
+                weight_candidates=self.weight_candidates))
+        final = ProxyBenchmark(best.dag, description=proxy.description)
+        final_acc = vector_accuracy(self.target, best.metrics, self.keys,
+                                    self.weights)
+        return StructuralTuneResult(
+            proxy=final,
+            converged=best.worst_dev <= self.tol,
+            generations=len(history),
+            structures_scored=self.structures_scored,
+            weight_candidates=self.weight_candidates,
+            candidates_evaluated=(self.structures_scored
+                                  + self.weight_candidates),
+            initial_accuracy=init_acc,
+            final_accuracy=final_acc,
+            final_deviation=best.worst_dev,
+            best_lineage=best.lineage,
+            new_body_compiles=scorer.new_compiles,
+            history=history)
+
+
+def structural_tune(proxy: ProxyBenchmark, target_metrics: Dict[str, float],
+                    **kw) -> StructuralTuneResult:
+    return StructuralTuner(target_metrics, **kw).tune(proxy)
+
+
+# ---------------------------------------------------------------------------
+# canonical fidelity harness (shared by the tier-1 tests and the CI gate)
+# ---------------------------------------------------------------------------
+
+
+def structural_fidelity_harness(size: int = 16384, chunk: int = 256
+                                ) -> Tuple[ProxyDAG, ProxyDAG, List[str]]:
+    """``(reference, detuned, component_pool)`` for the structure-only
+    fidelity contract: the reference pipeline carries an fft stage the
+    detuned structure lacks *entirely* (not weight-0 — absent), so no
+    re-weighting of the detuned edges can create the missing transform
+    channel.  A weight-only tuner must saturate on this target; the
+    structural tuner must insert the edge and converge.  One definition,
+    imported by both ``tests/test_fidelity.py`` and the
+    ``structure_sweep`` CI gate in ``benchmarks/compile_vs_run.py`` — so
+    the test and the gate can never drift apart silently."""
+    from .dwarfs import ComponentParams
+
+    def _e(comp, src, dst, weight=1):
+        return Edge(comp, src, dst,
+                    ComponentParams(data_size=size, chunk_size=chunk,
+                                    weight=weight))
+
+    reference = ProxyDAG(
+        "fft_ref", {"records": size},
+        [_e("interval_sampling", ["records"], "sampled"),
+         _e("fft", ["sampled"], "freq", 2),
+         _e("quick_sort", ["freq"], "sorted", 4),
+         _e("merge_sort", ["sorted"], "merged", 2)], "merged")
+    detuned = ProxyDAG(
+        "fft_detuned", {"records": size},
+        [_e("interval_sampling", ["records"], "sampled"),
+         _e("quick_sort", ["sampled"], "sorted", 2),
+         _e("merge_sort", ["sorted"], "merged")], "merged")
+    pool = ["interval_sampling", "quick_sort", "merge_sort", "fft",
+            "hash", "monte_carlo"]
+    return reference, detuned, pool

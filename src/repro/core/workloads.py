@@ -13,7 +13,7 @@ round-trip rather than constructed inline.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -343,6 +343,26 @@ PROXY_SPECS: Dict[str, Dict[str, Any]] = {
     "pagerank": PAGERANK_PROXY_SPEC,
     "sift": SIFT_PROXY_SPEC,
 }
+
+def seed_structures(names: Optional[Sequence[str]] = None) -> List["ProxyDAG"]:
+    """Seed pool for the structural search: every named Table-3 proxy's
+    DAG, loaded through the versioned ProxySpec round-trip (so a machine
+    mutation always starts from the same structures a human would).
+    ``names`` restricts/reorders the pool; default is every
+    ``PROXY_SPECS`` entry in sorted order."""
+    picked = sorted(PROXY_SPECS) if names is None else list(names)
+    return [ProxySpec.from_json(PROXY_SPECS[n]).to_benchmark().dag
+            for n in picked]
+
+
+def seed_components(names: Optional[Sequence[str]] = None) -> List[str]:
+    """The dwarf components appearing in the Table-3 proxies — the
+    default mutation-component pool a structural search draws from when
+    the caller does not widen it."""
+    picked = sorted(PROXY_SPECS) if names is None else list(names)
+    return sorted({e["component"]
+                   for n in picked for e in PROXY_SPECS[n]["edges"]})
+
 
 WORKLOADS: Dict[str, Workload] = {
     "terasort": Workload(

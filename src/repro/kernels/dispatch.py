@@ -29,9 +29,13 @@ _PALLAS_PLATFORMS = ("tpu", "gpu")
 
 
 def default_interpret(platform: Optional[str] = None) -> bool:
-    """True when Pallas kernels must run under the interpreter here."""
+    """True when Pallas kernels must run under the interpreter here.
+
+    An empty ``REPRO_PALLAS_INTERPRET`` means *unset* (auto-detect), the
+    same convention every other knob follows — CI matrix legs export the
+    variable unconditionally with ``""`` for the default configuration."""
     env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
+    if env is not None and env.strip() != "":
         return env not in ("0", "false", "False")
     p = platform or jax.default_backend()
     return p not in _PALLAS_PLATFORMS

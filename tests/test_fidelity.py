@@ -20,10 +20,12 @@ import numpy as np
 import pytest
 
 from repro.api import cache_stats
-from repro.core import AutoTuner, PopulationTuner, ProxyBenchmark, engine
+from repro.core import (AutoTuner, PopulationTuner, ProxyBenchmark,
+                        StructuralTuner, engine)
 from repro.core.autotune import DEFAULT_METRICS, _deviations
 from repro.core.dag import Edge, ProxyDAG
 from repro.core.dwarfs import ComponentParams
+from repro.core.structsearch import structural_fidelity_harness
 
 PAPER_TOL = 0.10          # the paper's ~10% deviation target
 BUDGET = 96               # fixed candidate budget (16 x 6 generations)
@@ -131,3 +133,67 @@ def test_population_sweep_reports_zero_engine_traces(target):
                           seed=SEED, execute=False).tune(_detuned())
     assert pop.candidates_evaluated <= 24
     assert engine.stats()["traces"] == 0
+
+
+# ---------------------------------------------------------------------------
+# structural fidelity: a target reachable only by a structure change
+# ---------------------------------------------------------------------------
+#
+# The reference pipeline carries an fft stage the detuned structure lacks
+# *entirely* (not weight-0 — the edge does not exist).  No re-weighting of
+# the remaining edges can create the missing transform channel, so this is
+# the blind spot of every weight-only tuner — population search included —
+# and exactly the half of the Fig.-3 design space the StructuralTuner adds.
+# The harness definition is shared with the benchmark CI gate
+# (structural_fidelity_harness) so the two can never drift apart.
+
+_FFT_REF, _FFT_DETUNED, STRUCT_POOL = structural_fidelity_harness(size=SIZE)
+
+
+def _fft_reference():
+    return ProxyBenchmark(_FFT_REF).clone()
+
+
+def _structure_detuned():
+    """The fft edge is gone — not pruned to weight 0, absent."""
+    return ProxyBenchmark(_FFT_DETUNED).clone()
+
+
+@pytest.fixture(scope="module")
+def fft_target():
+    return engine.measure(_fft_reference().dag)
+
+
+def test_weight_only_tuner_cannot_create_a_missing_channel(fft_target):
+    assert fft_target["mix_fft"] > 0
+    pop = PopulationTuner(fft_target, tol=0.05, population=16,
+                          generations=6, max_candidates=BUDGET, seed=SEED,
+                          execute=False).tune(_structure_detuned())
+    tuned = engine.measure(pop.proxy.dag)
+    assert tuned.get("mix_fft", 0.0) == 0.0     # unreachable by weights
+    assert pop.final_deviation > PAPER_TOL
+
+
+def test_structural_tuner_rediscovers_the_missing_edge(fft_target):
+    """Under the same total candidate budget, the structural tuner must
+    insert the absent fft component and converge where weight-only search
+    cannot — with zero engine retraces (structure scoring is pure
+    compositional arithmetic over cached body reports)."""
+    weight_only = PopulationTuner(
+        fft_target, tol=0.05, population=16, generations=6,
+        max_candidates=BUDGET, seed=SEED,
+        execute=False).tune(_structure_detuned())
+
+    t0 = engine.stats()["traces"]
+    res = StructuralTuner(fft_target, tol=PAPER_TOL, max_candidates=BUDGET,
+                          generations=4, components=STRUCT_POOL,
+                          seed=SEED).tune(_structure_detuned())
+    assert engine.stats()["traces"] - t0 == 0
+    assert res.candidates_evaluated <= BUDGET
+    assert any(e.component == "fft" for e in res.proxy.dag.edges)
+    assert res.final_deviation <= PAPER_TOL
+    assert res.final_deviation < weight_only.final_deviation
+    # the returned proxy really measures at the reported deviation
+    redo = _worst_dev(fft_target, engine.measure(res.proxy.dag),
+                      _keys(fft_target))
+    assert redo == pytest.approx(res.final_deviation, rel=1e-6, abs=1e-9)

@@ -1,0 +1,378 @@
+"""Property tests for the structural search layer: mutation validity,
+canonical-key stability under relabeling, lossless spec round-trips for
+machine-generated structures, and cross-process determinism of the
+mutate -> lower -> score pipeline.
+
+Randomized structures come from a seeded ``np.random`` generator; the
+seed axis is driven by hypothesis when installed (the CI profile) and by
+a fixed parametrized sweep otherwise, so the properties are exercised
+either way."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import ProxySpec, cache_stats, get_stack
+from repro.core import engine, schedule
+from repro.core.dag import (Edge, ProxyDAG, StructureError,
+                            insert_accumulating_edge, insert_edge,
+                            merge_chain, remove_edge, split_edge,
+                            swap_component)
+from repro.core.dwarfs import ComponentParams
+from repro.core.proxy import ProxyBenchmark
+from repro.core.structsearch import (StructuralTuner, propose_mutation,
+                                     validate_components)
+
+try:
+    from hypothesis import given, strategies as st
+
+    def property_seeds(f):
+        return given(seed=st.integers(0, 2 ** 31 - 1))(f)
+except ImportError:  # pragma: no cover - hypothesis is a dev dependency
+    def property_seeds(f):
+        return pytest.mark.parametrize("seed", range(25))(f)
+
+SIZE = 2048
+POOL = ["quick_sort", "merge_sort", "interval_sampling", "hash",
+        "min_max", "monte_carlo"]
+
+
+def _edge(comp, src, dst, weight=1):
+    extra = {"rounds": 2} if comp == "hash" else {}
+    return Edge(comp, src, dst,
+                ComponentParams(data_size=SIZE, chunk_size=64,
+                                weight=weight, extra=extra))
+
+
+def _random_dag(rs: np.random.RandomState) -> ProxyDAG:
+    """Chain DAGs with optional accumulating joins — the machine-mutation
+    input shapes."""
+    n = int(rs.randint(2, 6))
+    edges = [_edge(POOL[rs.randint(len(POOL))],
+                   ["src"] if i == 0 else [f"n{i - 1}"], f"n{i}",
+                   int(rs.randint(0, 5))) for i in range(n)]
+    if rs.rand() < 0.5:
+        j = int(rs.randint(n))
+        edges.insert(j + 1, _edge(POOL[rs.randint(len(POOL))], ["src"],
+                                  f"n{j}"))
+    dag = ProxyDAG("prop", {"src": SIZE}, edges, f"n{n - 1}")
+    dag.validate_structure()
+    return dag
+
+
+def _snap(dag):
+    return json.dumps(dag.to_json(), sort_keys=True)
+
+
+def _snap_edge(e):
+    return json.dumps(e.to_json(), sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# mutation validity (acyclic, topologically ordered, connected to sink)
+# ---------------------------------------------------------------------------
+
+
+@property_seeds
+def test_proposed_mutations_yield_valid_structures(seed):
+    rs = np.random.RandomState(seed)
+    dag = _random_dag(rs)
+    before = _snap(dag)
+    got = propose_mutation(dag, rs, POOL)
+    assert _snap(dag) == before                  # proposals are pure
+    if got is None:
+        return
+    child, mut = got
+    child.validate_structure()                   # raises on any violation
+    # the mutation's edit set is consistent: removed edges came from the
+    # parent, added edges are in the child
+    parent_edges = [_snap_edge(e) for e in dag.edges]
+    child_edges = [_snap_edge(e) for e in child.edges]
+    for e in mut.removed:
+        assert _snap_edge(e) in parent_edges
+    for e in mut.added:
+        assert _snap_edge(e) in child_edges
+
+
+@property_seeds
+def test_mutation_chains_stay_valid(seed):
+    """Repeated mutation (the evolutionary loop's actual usage) must never
+    drift out of the valid region."""
+    rs = np.random.RandomState(seed)
+    cur = _random_dag(rs)
+    for _ in range(4):
+        got = propose_mutation(cur, rs, POOL)
+        if got is None:
+            break
+        cur = got[0]
+        cur.validate_structure()
+
+
+def test_primitives_reject_illegal_sites():
+    dag = ProxyDAG("t", {"src": SIZE},
+                   [_edge("quick_sort", ["src"], "a", 1)], "a")
+    with pytest.raises(StructureError):
+        remove_edge(dag, 0)                      # last edge
+    with pytest.raises(StructureError):
+        split_edge(dag, 0, 1)                    # weight 1 cannot split
+    with pytest.raises(StructureError):
+        merge_chain(dag, 0)                      # nothing after edge 0
+    with pytest.raises(StructureError):
+        swap_component(dag, 0, "quick_sort")     # same component
+    with pytest.raises(KeyError):
+        insert_edge(dag, 0, "not_a_component")
+    with pytest.raises(StructureError):
+        insert_accumulating_edge(dag, "nowhere", 0, "min_max")
+
+
+def test_split_then_merge_restores_canonical_structure():
+    dag = ProxyDAG("t", {"src": SIZE},
+                   [_edge("quick_sort", ["src"], "a", 4),
+                    _edge("min_max", ["a"], "b", 1)], "b")
+    split = split_edge(dag, 0, 1)
+    assert len(split.edges) == 3
+    merged = merge_chain(split, 0)
+    assert merged.canonical_structure_key() == dag.canonical_structure_key()
+
+
+def test_remove_edge_bypasses_consumers_and_sink():
+    dag = ProxyDAG("t", {"src": SIZE},
+                   [_edge("quick_sort", ["src"], "a", 2),
+                    _edge("min_max", ["a"], "b", 1)], "b")
+    no_tail = remove_edge(dag, 1)
+    assert no_tail.sink == "a"
+    no_head = remove_edge(dag, 0)
+    assert no_head.edges[0].src == ["src"]
+    no_head.validate_structure()
+
+
+def test_validate_structure_rejects_dead_edges():
+    dag = ProxyDAG("t", {"src": SIZE},
+                   [_edge("quick_sort", ["src"], "a", 1),
+                    _edge("min_max", ["src"], "dead", 1)], "a")
+    with pytest.raises(StructureError):
+        dag.validate_structure()
+
+
+# ---------------------------------------------------------------------------
+# canonical structure keys (isomorphic relabeling)
+# ---------------------------------------------------------------------------
+
+
+@property_seeds
+def test_canonical_key_stable_under_relabeling(seed):
+    rs = np.random.RandomState(seed)
+    dag = _random_dag(rs)
+    mapping = {e.dst: f"x_{i}" for i, e in enumerate(dag.edges)}
+    relabeled = ProxyDAG(
+        dag.name, dict(dag.sources),
+        [Edge(e.component, [mapping.get(s, s) for s in e.src],
+              mapping.get(e.dst, e.dst), e.params) for e in dag.edges],
+        mapping.get(dag.sink, dag.sink))
+    relabeled.validate_structure()
+    assert (relabeled.canonical_structure_key()
+            == dag.canonical_structure_key())
+    # ... and the canonical key still separates genuinely different
+    # structures: dropping an edge changes it
+    try:
+        pruned = remove_edge(dag, 0)
+    except StructureError:
+        return
+    assert (pruned.canonical_structure_key()
+            != dag.canonical_structure_key())
+
+
+def test_relabeled_structure_shares_plan_and_executable():
+    d1 = ProxyDAG("a", {"src": SIZE},
+                  [_edge("quick_sort", ["src"], "mid", 2),
+                   _edge("min_max", ["mid"], "out", 1)], "out")
+    d2 = ProxyDAG("b", {"src": SIZE},
+                  [_edge("quick_sort", ["src"], "other", 2),
+                   _edge("min_max", ["other"], "final", 1)], "final")
+    assert schedule.lower(d1) is schedule.lower(d2)       # one cached plan
+    stack = get_stack("openmp")
+    r1 = stack.run(d1)
+    t0 = cache_stats()["traces"]
+    r2 = stack.run(d2)
+    assert cache_stats()["traces"] == t0                  # cache hit
+    assert np.asarray(r1.result) == np.asarray(r2.result)  # bit-identical
+
+
+# ---------------------------------------------------------------------------
+# spec round-trip for machine-generated structures
+# ---------------------------------------------------------------------------
+
+
+@property_seeds
+def test_mutated_spec_roundtrips_losslessly(seed):
+    rs = np.random.RandomState(seed)
+    cur = _random_dag(rs)
+    for _ in range(3):
+        got = propose_mutation(cur, rs, POOL)
+        if got is not None:
+            cur = got[0]
+    spec = ProxySpec.from_dag(cur, stack="openmp")
+    text = spec.dumps()                          # json-serializable always
+    loaded = ProxySpec.loads(text)
+    redag = loaded.to_dag()
+    assert redag.structure_key() == cur.structure_key()
+    assert (redag.canonical_structure_key()
+            == cur.canonical_structure_key())
+    assert loaded.dumps() == text                # idempotent re-dump
+    # re-lowering reproduces the exact stage partition
+    p1 = schedule.lower(cur, threshold=0.0, cache=False)
+    p2 = schedule.lower(redag, threshold=0.0, cache=False)
+    assert p1.structure_key() == p2.structure_key()
+
+
+def test_numpy_scalars_in_params_serialize():
+    dag = ProxyDAG("t", {"src": SIZE},
+                   [_edge("quick_sort", ["src"], "a", 1)], "a")
+    dag.edges[0].params.weight = np.int64(3)
+    dag.edges[0].params.extra["rounds"] = np.float64(2.0)
+    spec = ProxySpec.from_dag(dag)
+    loaded = ProxySpec.loads(spec.dumps())
+    e = loaded.to_dag().edges[0]
+    assert e.params.weight == 3
+    assert isinstance(e.to_json()["weight"], int)
+
+
+def test_fractional_weight_executes_and_serializes_identically():
+    """rounded() and the dynamic-param path must agree on fractional
+    weights (round-half-away, not truncate), or save/load changes the
+    executed repeat count."""
+    p = ComponentParams(data_size=SIZE, chunk_size=64, weight=2.7)
+    assert p.rounded().weight == 3
+    e = Edge("quick_sort", ["src"], "a", p)
+    assert int(e.dynamic_values()["weight"]) == e.to_json()["weight"] == 3
+
+
+# ---------------------------------------------------------------------------
+# cross-process determinism of mutate -> lower -> score
+# ---------------------------------------------------------------------------
+
+
+def _search_fingerprint() -> str:
+    """Canonical keys, plan partitions, and scored metrics of a fixed
+    mutation trajectory — byte-identical across processes."""
+    dag = ProxyDAG("fp", {"src": SIZE},
+                   [_edge("interval_sampling", ["src"], "a", 1),
+                    _edge("quick_sort", ["a"], "b", 3),
+                    _edge("merge_sort", ["b"], "c", 2)], "c")
+    rs = np.random.RandomState(1234)
+    scorer = engine.StructureScorer()
+    out = []
+    cur = dag
+    for _ in range(6):
+        got = propose_mutation(cur, rs, POOL)
+        if got is None:
+            continue
+        child, mut = got
+        plan = schedule.lower(child, threshold=0.0, cache=False)
+        metrics = scorer.score_child(cur, child, mut.removed, mut.added)
+        out.append({
+            "kind": mut.kind,
+            "detail": mut.detail,
+            "key": repr(child.canonical_structure_key()),
+            "partition": [list(m) for m in plan.partition()],
+            "metrics": {k: round(v, 9) for k, v in sorted(metrics.items())
+                        if k.startswith("mix_")
+                        or k == "arithmetic_intensity"},
+        })
+        cur = child
+    return json.dumps(out, sort_keys=True)
+
+
+def test_mutate_lower_score_deterministic_in_process():
+    assert _search_fingerprint() == _search_fingerprint()
+
+
+def test_mutate_lower_score_deterministic_across_processes():
+    want = _search_fingerprint()
+    code = ("import sys, tests.test_structsearch as t;"
+            "sys.stdout.write(t._search_fingerprint())")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [root, os.path.join(root, "src"), env.get("PYTHONPATH", "")])
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    got = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, check=True).stdout
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# scoring: delta == full assembly, plan == dag
+# ---------------------------------------------------------------------------
+
+
+@property_seeds
+def test_delta_scoring_matches_full_assembly(seed):
+    rs = np.random.RandomState(seed)
+    dag = _random_dag(rs)
+    got = propose_mutation(dag, rs, POOL)
+    if got is None:
+        return
+    child, mut = got
+    scorer = engine.StructureScorer()
+    scorer.score(dag)                             # parent cached
+    delta = scorer.score_child(dag, child, mut.removed, mut.added)
+    full = engine.StructureScorer().score(child)
+    for k, v in full.items():
+        assert delta[k] == pytest.approx(v, rel=1e-9, abs=1e-9), k
+
+
+def test_measure_plan_matches_measure_dag():
+    dag = ProxyDAG("t", {"src": SIZE},
+                   [_edge("quick_sort", ["src"], "a", 2),
+                    _edge("min_max", ["a"], "b", 1)], "b")
+    plan = schedule.lower(dag, threshold=0.0, cache=False)
+    via_plan = engine.measure_plan(plan)
+    via_dag = engine.measure(dag)
+    for k, v in via_dag.items():
+        assert via_plan[k] == pytest.approx(v, rel=1e-9, abs=1e-9), k
+
+
+# ---------------------------------------------------------------------------
+# tuner budget / bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_structural_tuner_respects_total_budget():
+    ref = ProxyDAG("ref", {"src": SIZE},
+                   [_edge("interval_sampling", ["src"], "a", 1),
+                    _edge("quick_sort", ["a"], "b", 4),
+                    _edge("merge_sort", ["b"], "c", 2)], "c")
+    target = engine.measure(ref)
+    det = ProxyDAG("det", {"src": SIZE},
+                   [_edge("interval_sampling", ["src"], "a", 1),
+                    _edge("quick_sort", ["a"], "b", 1)], "b")
+    tuner = StructuralTuner(target, max_candidates=40, generations=3,
+                            components=POOL, seed=0, tol=0.05)
+    res = tuner.tune(ProxyBenchmark(det))
+    assert res.candidates_evaluated <= 40
+    assert (res.candidates_evaluated
+            == res.structures_scored + res.weight_candidates)
+    assert res.final_accuracy["avg"] >= res.initial_accuracy["avg"] - 1e-9
+    # every structure the result references is valid and serializable
+    res.proxy.dag.validate_structure()
+    ProxySpec.from_benchmark(res.proxy).dumps()
+
+
+def test_executable_cache_reports_eviction_pressure():
+    assert "evictions" in cache_stats()
+
+
+def test_component_pool_typos_fail_loudly():
+    dag = ProxyDAG("t", {"src": SIZE},
+                   [_edge("quick_sort", ["src"], "a", 1)], "a")
+    with pytest.raises(KeyError):
+        propose_mutation(dag, np.random.RandomState(0),
+                         ["quick_sort", "not_a_component"])
+    with pytest.raises(KeyError):
+        validate_components(["qwick_sort"])
