@@ -34,6 +34,7 @@ from .spec import SPEC_VERSION, ProxySpec, SpecError, validate_spec_json
 from .stack import (HadoopStack, MPIStack, OpenMPStack, RunReport,
                     SparkStack, Stack, cache_cap, cache_stats, get_stack,
                     list_stacks, register_stack, reset_cache_stats)
+from ..core.pool import ExecutablePool, get_pool, pool_stats
 
 
 def tune_structure(proxy, target_metrics, **kw):
@@ -58,6 +59,20 @@ def tune_structure(proxy, target_metrics, **kw):
     return StructuralTuner(target_metrics, **kw).tune(proxy)
 
 
+def serve(trace, **kw):
+    """Serve a request stream through the proxy serving engine and return
+    its :class:`~repro.serve.engine.ServeReport` (P50/P95/P99 latency,
+    time to first result, sustained throughput, retrace accounting).
+
+    ``trace`` is an :class:`~repro.serve.engine.ArrivalTrace` — build one
+    with :func:`repro.serve.poisson_trace` / :func:`repro.serve.burst_trace`
+    — or a plain request list; keyword args configure the engine
+    (``stack``, ``max_batch``, ``bucket_size``, ``clock``, ``mode``,
+    ``warmup``)."""
+    from ..serve.engine import serve as _serve
+    return _serve(trace, **kw)
+
+
 __all__ = [
     "CORE_FIELDS", "EXTRA_BOUNDS", "FIELD_BOUNDS", "INT_FIELDS",
     "ParamLeaf", "ParamSpace", "bounds_for",
@@ -65,4 +80,5 @@ __all__ = [
     "HadoopStack", "MPIStack", "OpenMPStack", "RunReport", "SparkStack",
     "Stack", "cache_cap", "cache_stats", "get_stack", "list_stacks",
     "register_stack", "reset_cache_stats", "tune_structure",
+    "ExecutablePool", "get_pool", "pool_stats", "serve",
 ]

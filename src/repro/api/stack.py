@@ -44,8 +44,9 @@ except ImportError:  # pragma: no cover - depends on container jax build
     _shard_map = None
 
 from ..core import schedule as plans
-from ..core.cachetools import cached_get
+from ..core.cachetools import hit_rate
 from ..core.dag import ProxyDAG
+from ..core.pool import get_pool
 
 
 # ---------------------------------------------------------------------------
@@ -86,8 +87,14 @@ def cache_cap() -> int:
     return max(1, int(raw))
 
 
-def cache_stats() -> Dict[str, int]:
-    return dict(CACHE_STATS)
+def cache_stats() -> Dict[str, float]:
+    """Aggregate executable-cache counters across every stack instance
+    (mirrored from the per-instance pool domains), plus the warm-serving
+    ``hit_rate`` the serving bench reports; per-domain breakdowns live in
+    ``repro.core.pool.get_pool().stats()``."""
+    stats: Dict[str, float] = dict(CACHE_STATS)
+    stats["hit_rate"] = hit_rate(stats)
+    return stats
 
 
 def reset_cache_stats() -> None:
@@ -217,15 +224,30 @@ class Stack(abc.ABC):
 
     # -- compiled plan executables ------------------------------------------
 
+    def exec_domain(self):
+        """This instance's compiled-executable domain in the process-wide
+        :class:`~repro.core.pool.ExecutablePool`.  Registered lazily and
+        per *instance* (a fresh stack starts cold — the compile-accounting
+        tests and benchmarks rely on that), auto-unregistered when the
+        instance dies; lookups mirror into the module-level
+        :data:`CACHE_STATS` so the aggregate counters keep working."""
+        dom = self.__dict__.get("_pool_domain")
+        if dom is None:
+            dom = get_pool().register_instance(
+                self, f"stack:{self.name}", kind="executable",
+                mirror=CACHE_STATS)
+            self.__dict__["_pool_domain"] = dom
+            self.__dict__["_dag_cache"] = dom.cache
+        dom.cap = cache_cap()    # live env resolution, as cached_get did
+        return dom
+
     def _compiled_plan(self, plan, batch: bool) -> Callable:
         """Cached jitted ``fn(rng, dyn)`` for this stack's execution model.
         One compile per (stack, plan structure key, batch-ness); every
         dynamic-param setting of the structure reuses it."""
-        cache = self.__dict__.setdefault("_dag_cache", {})
-        return cached_get(
-            cache, (batch, plan.structure_key()),
-            lambda: self._wrap_parametric(plan.build_parametric(), batch),
-            CACHE_STATS, cache_cap())
+        return get_pool().get(
+            self.exec_domain(), (batch, plan.structure_key()),
+            lambda: self._wrap_parametric(plan.build_parametric(), batch))
 
     def _wrap_parametric(self, pfn: Callable, batch: bool) -> Callable:
         """Bake this stack's execution model into a jitted parametric fn."""
@@ -262,10 +284,41 @@ class Stack(abc.ABC):
         Keyed on ``(plan structure key, bucket size)``: every same-size
         bucket of every sweep reuses it — at most one executable per
         bucket signature, zero retraces per candidate."""
-        cache = self.__dict__.setdefault("_dag_cache", {})
-        return cached_get(
-            cache, (("population", n), plan.structure_key()),
-            lambda: self._wrap_population(plan, n), CACHE_STATS, cache_cap())
+        return get_pool().get(
+            self.exec_domain(), (("population", n), plan.structure_key()),
+            lambda: self._wrap_population(plan, n))
+
+    # -- serving micro-batches (one compiled call per request chunk) ---------
+
+    def _compiled_plan_serve(self, plan, n: int) -> Callable:
+        """Cached jitted ``fn(rngs, dynb)`` executing ``n`` heterogeneous
+        *requests* of one structure in a single vmapped call.  Unlike the
+        population form (one shared rng, candidate-batched dyn), every
+        request carries its own rng — the serving micro-batch axis.  Keyed
+        on ``(("serve", n), plan.structure_key())``: every same-size
+        micro-batch of every stream reuses one executable, so steady-state
+        serving compiles at most once per (structure, chunk size)."""
+        return get_pool().get(
+            self.exec_domain(), (("serve", n), plan.structure_key()),
+            lambda: self._wrap_serve(plan, n))
+
+    def _wrap_serve(self, plan, n: int) -> Callable:
+        """Bake this stack's execution model into the request-batched
+        serving form: vmap over *paired* (rng, dyn) request axes.  No
+        buffer donation — the serving engine may replay a trace."""
+        pfn = plan.build_parametric()
+
+        def f(rngs, dynb):
+            CACHE_STATS["traces"] += 1
+            return jax.vmap(pfn)(rngs, dynb)
+
+        return jax.jit(f)
+
+    def _serve_call(self, fn: Callable, rngs: jax.Array,
+                    dynb: Tuple) -> Any:
+        """One serving micro-batch call (placement hook — see SparkStack).
+        Not synced: the serving loop's latency accounting blocks."""
+        return fn(rngs, dynb)
 
     def _wrap_population(self, plan, n: int) -> Callable:
         """Bake this stack's execution model into the canonical vmapped
@@ -574,6 +627,25 @@ class MPIStack(Stack):
 
         return jax.jit(f)
 
+    def _wrap_serve(self, plan, n):
+        """Shard the serving micro-batch over the ranks: request rngs and
+        dyn params shard together on the request axis, each rank vmapping
+        its own slice of the chunk."""
+        from ..distributed.sharding import candidate_spec_axis
+        if _shard_map is None or candidate_spec_axis(
+                self.mesh, n, prefer=(self.axis,)) is None:
+            return super()._wrap_serve(plan, n)  # pragma: no cover
+        pfn = plan.build_parametric()
+
+        def f(rngs, dynb):
+            CACHE_STATS["traces"] += 1
+            return _shard_map(jax.vmap(pfn), mesh=self.mesh,
+                              in_specs=(P(self.axis), P(self.axis)),
+                              out_specs=P(self.axis),
+                              check_rep=False)(rngs, dynb)
+
+        return jax.jit(f)
+
 
 class SparkStack(Stack):
     """Global-view jit with input sharding constraints; intermediates stay
@@ -638,6 +710,17 @@ class SparkStack(Stack):
             rng = jax.device_put(rng, NamedSharding(self.mesh, P()))
             out = fn(rng, dynb)
         return out, 0.0
+
+    def _serve_call(self, fn, rngs, dynb):
+        from ..distributed.sharding import serve_shardings
+        with self.mesh:
+            # place the micro-batch over the workers: the paired request
+            # axes of rngs and dyn params partition together
+            rng_s, dyn_s = serve_shardings(self.mesh, rngs, dynb,
+                                           prefer=(self.axis,))
+            out = fn(jax.device_put(rngs, rng_s),
+                     jax.device_put(dynb, dyn_s))
+        return out
 
 
 class HadoopStack(Stack):
@@ -723,8 +806,9 @@ class HadoopStack(Stack):
         return jnp.asarray(out_np), io_bytes
 
     def _cached_stage(self, key: Tuple, make: Callable) -> Callable:
-        cache = self.__dict__.setdefault("_stage_cache", {})
-
+        # staged executables share this instance's pool domain with the
+        # whole-plan executables (keys cannot collide: stage keys lead
+        # with a string tag), so the eviction cap bounds both together
         def build() -> Callable:
             def counted(*args, _f=make()):
                 CACHE_STATS["traces"] += 1
@@ -732,7 +816,7 @@ class HadoopStack(Stack):
 
             return jax.jit(counted)
 
-        return cached_get(cache, key, build, CACHE_STATS, cache_cap())
+        return get_pool().get(self.exec_domain(), key, build)
 
     def _run_stages(self, dag: ProxyDAG, rng: jax.Array, vmap: bool
                     ) -> Tuple[Any, float]:

@@ -13,13 +13,30 @@ needs, deduplicated here:
 * **hit/miss accounting** — the no-retrace tests and the engine
   benchmarks assert the compile-once contract through these counters.
 
+Both helpers hold :data:`LOCK` (one process-wide reentrant lock): the
+population path dispatches strata over the ``REPRO_POP_WORKERS`` host
+thread pool and the serving engine admits requests from caller threads,
+so lookup-or-build and eviction must be atomic — an unlocked
+``cache.pop(next(iter(cache)))`` racing a concurrent insert can double-pop
+or corrupt the stats counters.  ``make`` runs *under* the lock: two
+threads missing the same key must not both compile the artifact (the
+whole point of the caches), and jitted execution — the expensive
+concurrent work — never happens inside ``make``.  The lock is reentrant
+because a build may itself consult another cache (a stack executable
+build fetches the plan cache).
+
 No jax imports: this module must stay importable from anywhere in the
 package without initializing a backend.
 """
 
 from __future__ import annotations
 
+import threading
 from typing import Any, Callable, Dict, Optional
+
+#: process-wide lock serializing every cache mutation (reentrant: builds
+#: may nest cache lookups, e.g. executable build -> plan cache)
+LOCK = threading.RLock()
 
 
 def evict_oldest(cache: Dict, cap: Optional[int],
@@ -31,12 +48,13 @@ def evict_oldest(cache: Dict, cap: Optional[int],
     search sweeping many DAG shapes watches this counter."""
     if cap is None:
         return 0
-    dropped = 0
-    while len(cache) > cap:
-        cache.pop(next(iter(cache)))
-        dropped += 1
-    if dropped and stats is not None:
-        stats[evict] = stats.get(evict, 0) + dropped
+    with LOCK:
+        dropped = 0
+        while len(cache) > cap:
+            cache.pop(next(iter(cache)))
+            dropped += 1
+        if dropped and stats is not None:
+            stats[evict] = stats.get(evict, 0) + dropped
     return dropped
 
 
@@ -46,15 +64,25 @@ def cached_get(cache: Dict, key: Any, make: Callable[[], Any],
                hit: str = "hits", miss: str = "misses") -> Any:
     """The shared lookup-or-build pattern: fetch ``key`` from ``cache``,
     building (and FIFO-evicting) on a miss, bumping the ``stats`` counters
-    either way.  ``make`` runs un-locked — callers are single-threaded per
-    cache (the JAX tracing model) — and its result is what gets cached."""
-    value = cache.get(key)
-    if value is None:
-        if stats is not None:
-            stats[miss] = stats.get(miss, 0) + 1
-        value = make()
-        cache[key] = value
-        evict_oldest(cache, cap, stats)
-    elif stats is not None:
-        stats[hit] = stats.get(hit, 0) + 1
+    either way.  Atomic under :data:`LOCK`, including ``make`` — a miss
+    races another thread's identical miss otherwise and the artifact
+    (typically a compile) gets built twice."""
+    with LOCK:
+        value = cache.get(key)
+        if value is None:
+            if stats is not None:
+                stats[miss] = stats.get(miss, 0) + 1
+            value = make()
+            cache[key] = value
+            evict_oldest(cache, cap, stats)
+        elif stats is not None:
+            stats[hit] = stats.get(hit, 0) + 1
     return value
+
+
+def hit_rate(stats: Dict[str, int], hit: str = "hits",
+             miss: str = "misses") -> float:
+    """Warm-serving fraction of all lookups (0.0 when none happened) —
+    the cold-vs-warm axis the serving benchmarks report."""
+    lookups = stats.get(hit, 0) + stats.get(miss, 0)
+    return stats.get(hit, 0) / lookups if lookups else 0.0

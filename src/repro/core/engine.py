@@ -36,23 +36,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .cachetools import evict_oldest as _evict_oldest
+from .cachetools import LOCK
 from .dag import _INT_DYNAMIC, ProxyDAG, _init_sources, _terminals
 from .dwarfs import get_component
 from .dwarfs.base import fit_buffer
 from .metrics import CostReport, analyze_hlo_text, metric_vector
+from .pool import get_pool
 
 # process-wide caches: structure keys are value-hashable, so clones and
 # re-built DAGs with identical structure share entries.  Report caches hold
 # small dataclasses and can grow large; the executable cache retains
-# compiled XLA programs, so it is kept tight (FIFO eviction via the shared
-# repro.core.cachetools helpers)
+# compiled XLA programs, so it is kept tight.  All three register as
+# domains of the process-wide ExecutablePool — one admission/eviction
+# policy with the stack and plan caches — while the dicts themselves stay
+# module-level (the pool owns bookkeeping, not values).
 _BODY_CACHE: Dict[Tuple, CostReport] = {}
 _PIECE_CACHE: Dict[Tuple, CostReport] = {}
 _EXEC_CACHE: Dict[Tuple, Callable] = {}
 
 _REPORT_CACHE_CAP = 4096
 _EXEC_CACHE_CAP = 128
+
+_BODY_DOM = get_pool().register("engine:body", _BODY_CACHE, kind="report",
+                                cap=_REPORT_CACHE_CAP)
+_PIECE_DOM = get_pool().register("engine:piece", _PIECE_CACHE, kind="report",
+                                 cap=_REPORT_CACHE_CAP)
+_EXEC_DOM = get_pool().register("engine:exec", _EXEC_CACHE,
+                                kind="executable", cap=_EXEC_CACHE_CAP)
 
 _STATS = {"compiles": 0, "traces": 0, "hits": 0, "exec_compiles": 0}
 
@@ -69,10 +79,11 @@ def reset_stats() -> None:
 
 def clear_caches() -> None:
     """Drop every cached report/executable (tests and benchmarks use this
-    to measure cold-vs-warm behaviour)."""
-    _BODY_CACHE.clear()
-    _PIECE_CACHE.clear()
-    _EXEC_CACHE.clear()
+    to measure cold-vs-warm behaviour).  Clears through the pool so the
+    eviction-order bookkeeping stays coherent with the dicts."""
+    pool = get_pool()
+    for name in ("engine:body", "engine:piece", "engine:exec"):
+        pool.clear(name)
 
 
 def _analyze(fn: Callable, args: Tuple) -> CostReport:
@@ -109,45 +120,48 @@ def _body_report(e) -> CostReport:
     """Cost of ONE repeat of edge ``e`` (the fori_loop body): component
     application + the fit-back glue, exactly as ``dag._edge_out`` traces it."""
     key = _body_key(e)
-    rep = _BODY_CACHE.get(key)
-    if rep is not None:
-        _STATS["hits"] += 1
-        return rep
-    p = e.params.rounded()
-    comp = get_component(e.component)
+    with LOCK:
+        rep = _BODY_CACHE.get(key)
+        if rep is not None:
+            _STATS["hits"] += 1
+            _BODY_DOM.stats["hits"] += 1
+            return rep
+        _BODY_DOM.stats["misses"] += 1
+        p = e.params.rounded()
+        comp = get_component(e.component)
 
-    def body(x, rng):
-        return fit_buffer(comp(x, p, jax.random.fold_in(rng, 0)), p.data_size)
+        def body(x, rng):
+            return fit_buffer(comp(x, p, jax.random.fold_in(rng, 0)),
+                              p.data_size)
 
-    x_spec = jax.ShapeDtypeStruct((p.data_size,), jnp.float32)
-    rep = _analyze(body, (x_spec, _rng_spec()))
-    _BODY_CACHE[key] = rep
-    _evict_oldest(_BODY_CACHE, _REPORT_CACHE_CAP)
-    return rep
+        x_spec = jax.ShapeDtypeStruct((p.data_size,), jnp.float32)
+        rep = _analyze(body, (x_spec, _rng_spec()))
+        return get_pool().put(_BODY_DOM, key, rep)
+
+
+def _piece_report(key: Tuple, make: Callable[[], CostReport]) -> CostReport:
+    with LOCK:
+        rep = _PIECE_CACHE.get(key)
+        if rep is not None:
+            _STATS["hits"] += 1
+            _PIECE_DOM.stats["hits"] += 1
+            return rep
+        _PIECE_DOM.stats["misses"] += 1
+        return get_pool().put(_PIECE_DOM, key, make())
 
 
 def _sources_report(sources: Tuple[Tuple[str, int], ...]) -> CostReport:
-    key = ("sources", sources)
-    rep = _PIECE_CACHE.get(key)
-    if rep is not None:
-        _STATS["hits"] += 1
-        return rep
-    rep = _analyze(lambda rng: _init_sources(dict(sources), rng),
-                   (_rng_spec(),))
-    _PIECE_CACHE[key] = rep
-    return rep
+    return _piece_report(
+        ("sources", sources),
+        lambda: _analyze(lambda rng: _init_sources(dict(sources), rng),
+                         (_rng_spec(),)))
 
 
 def _finalize_report(n: int) -> CostReport:
-    key = ("finalize", n)
-    rep = _PIECE_CACHE.get(key)
-    if rep is not None:
-        _STATS["hits"] += 1
-        return rep
-    rep = _analyze(lambda x: jnp.sum(x),
-                   (jax.ShapeDtypeStruct((max(n, 1),), jnp.float32),))
-    _PIECE_CACHE[key] = rep
-    return rep
+    return _piece_report(
+        ("finalize", n),
+        lambda: _analyze(lambda x: jnp.sum(x),
+                         (jax.ShapeDtypeStruct((max(n, 1),), jnp.float32),)))
 
 
 def _sink_sizes_from(sources: Dict[str, int], edges, sink) -> int:
@@ -472,20 +486,22 @@ def executable(dag: ProxyDAG) -> Callable[[jax.Array], Any]:
     machine-generated isomorphic structures share the compile); stepping
     weights/extras re-uses the executable."""
     key = dag.canonical_structure_key()
-    jfn = _EXEC_CACHE.get(key)
-    if jfn is None:
-        _STATS["exec_compiles"] += 1
-        pfn = dag.build_parametric()
+    with LOCK:
+        jfn = _EXEC_CACHE.get(key)
+        if jfn is None:
+            _STATS["exec_compiles"] += 1
+            _EXEC_DOM.stats["misses"] += 1
+            pfn = dag.build_parametric()
 
-        def counted(rng, dyn):
-            _STATS["traces"] += 1
-            return pfn(rng, dyn)
+            def counted(rng, dyn):
+                _STATS["traces"] += 1
+                return pfn(rng, dyn)
 
-        jfn = jax.jit(counted)
-        _EXEC_CACHE[key] = jfn
-        _evict_oldest(_EXEC_CACHE, _EXEC_CACHE_CAP)
-    else:
-        _STATS["hits"] += 1
+            jfn = jax.jit(counted)
+            get_pool().put(_EXEC_DOM, key, jfn)
+        else:
+            _STATS["hits"] += 1
+            _EXEC_DOM.stats["hits"] += 1
     return lambda rng: jfn(rng, dag.dynamic_params())
 
 

@@ -1,0 +1,297 @@
+"""Unified ExecutablePool: every compiled artifact under one policy.
+
+Before the serving engine, each subsystem owned its caches ad hoc: every
+:class:`~repro.api.stack.Stack` instance held a private executable dict,
+:mod:`repro.core.engine` kept process-wide report/executable dicts, and
+:mod:`repro.core.schedule` its plan cache — three admission/eviction
+policies and no single place to ask "what is compiled right now?".  A
+serving process needs exactly that place: admission, FIFO eviction and
+warmup become *one* policy, pool-wide stats expose cold-vs-warm behavior,
+and a declared working set can be pre-compiled before traffic arrives.
+
+The pool does not own the artifact *values* — callers keep using their
+module/instance dicts (so existing cache-reference semantics, tests and
+instance lifetimes are untouched) — it owns the **bookkeeping**: every
+cache registers as a :class:`PoolDomain`, lookups route through
+:meth:`ExecutablePool.get`, and the pool enforces
+
+* the domain's own FIFO cap (``cap``), and
+* a pool-wide cap over all ``kind="executable"`` domains
+  (``REPRO_POOL_CAP``; unset = per-domain caps only): when the total
+  number of retained compiled programs exceeds it, the globally
+  oldest-inserted executable is evicted, whichever domain holds it.
+
+Thread-safety rides on :data:`repro.core.cachetools.LOCK` — one reentrant
+process-wide lock shared with the low-level helpers, so pool lookups and
+legacy ``cached_get`` callers serialize against each other.
+
+Stack instances register per-instance domains (tests and benchmarks rely
+on a fresh ``OpenMPStack()`` starting cold); a ``weakref.finalize``
+unregisters the domain when the instance dies so a churn of short-lived
+stacks cannot leak bookkeeping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+import weakref
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .cachetools import LOCK, hit_rate
+
+#: artifact classes a domain declares; only "executable" domains count
+#: against the pool-wide cap (reports are small dataclasses, plans are
+#: pure IR — retained compiled XLA programs are what must stay bounded)
+KINDS = ("executable", "report", "plan")
+
+
+def pool_cap() -> Optional[int]:
+    """Pool-wide retained-executable cap (``REPRO_POOL_CAP`` env var;
+    unset/empty = no pool-wide cap, per-domain caps still apply)."""
+    raw = os.environ.get("REPRO_POOL_CAP")
+    if raw is None or raw.strip() == "":
+        return None
+    return max(1, int(raw))
+
+
+@dataclasses.dataclass
+class PoolDomain:
+    """One registered cache: the owning dict plus its policy knobs."""
+
+    name: str
+    cache: Dict                       # the caller-owned artifact dict
+    kind: str = "executable"
+    cap: Optional[int] = None         # per-domain FIFO cap (None = uncapped)
+    #: optional legacy counter dict mirrored on every lookup (e.g. the
+    #: stack module's CACHE_STATS — kept so existing tests keep reading it)
+    mirror: Optional[Dict[str, int]] = None
+    stats: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"hits": 0, "misses": 0, "evictions": 0})
+    #: insertion sequence per key (global order for pool-wide FIFO)
+    seq: Dict[Any, int] = dataclasses.field(default_factory=dict)
+
+    def oldest_seq(self) -> Optional[int]:
+        if not self.cache:
+            return None
+        return self.seq.get(next(iter(self.cache)), -1)
+
+
+class ExecutablePool:
+    """One admission/eviction/warmup policy over every compiled artifact.
+
+    ``get(domain, key, make)`` is the single lookup-or-build entry point;
+    ``warmup(specs)`` pre-compiles a declared working set so a serving
+    process reaches its zero-retrace steady state before the first
+    request; ``stats()`` reports per-domain and pool-wide hit rates and
+    sizes (the cold-vs-warm axis the serving bench gates on)."""
+
+    def __init__(self, cap: Optional[int] = None):
+        self._cap = cap               # None -> read REPRO_POOL_CAP live
+        self._domains: Dict[str, PoolDomain] = {}
+        self._seq = itertools.count()
+
+    # -- registration --------------------------------------------------------
+
+    def register(self, name: str, cache: Optional[Dict] = None, *,
+                 kind: str = "executable", cap: Optional[int] = None,
+                 mirror: Optional[Dict[str, int]] = None) -> PoolDomain:
+        """Register (or fetch) the domain ``name``.  Re-registration with
+        the same name returns the existing domain — module-level caches
+        register once at import, stack instances pick fresh names."""
+        if kind not in KINDS:
+            raise ValueError(f"unknown domain kind {kind!r}; one of {KINDS}")
+        with LOCK:
+            dom = self._domains.get(name)
+            if dom is None:
+                dom = PoolDomain(name=name, cache={} if cache is None
+                                 else cache, kind=kind, cap=cap,
+                                 mirror=mirror)
+                self._domains[name] = dom
+            return dom
+
+    def register_instance(self, owner: Any, name: str, *,
+                          kind: str = "executable",
+                          cap: Optional[int] = None,
+                          mirror: Optional[Dict[str, int]] = None
+                          ) -> PoolDomain:
+        """Per-instance domain under a unique ``name#k`` suffix, auto-
+        unregistered when ``owner`` is garbage-collected — a fresh stack
+        instance starts cold and cannot leak pool bookkeeping."""
+        with LOCK:
+            unique = name
+            k = 0
+            while unique in self._domains:
+                k += 1
+                unique = f"{name}#{k}"
+            dom = self.register(unique, kind=kind, cap=cap, mirror=mirror)
+        weakref.finalize(owner, self.unregister, unique)
+        return dom
+
+    def unregister(self, name: str) -> None:
+        with LOCK:
+            self._domains.pop(name, None)
+
+    def domain(self, name: str) -> PoolDomain:
+        return self._domains[name]
+
+    # -- lookup-or-build -----------------------------------------------------
+
+    def get(self, dom: PoolDomain, key: Any, make: Callable[[], Any]) -> Any:
+        """Fetch ``key`` from ``dom``, building on a miss under the shared
+        lock (two threads missing the same key build once), then enforce
+        the domain cap and the pool-wide executable cap."""
+        with LOCK:
+            value = dom.cache.get(key)
+            if value is not None:
+                dom.stats["hits"] += 1
+                if dom.mirror is not None:
+                    dom.mirror["hits"] = dom.mirror.get("hits", 0) + 1
+                return value
+            dom.stats["misses"] += 1
+            if dom.mirror is not None:
+                dom.mirror["misses"] = dom.mirror.get("misses", 0) + 1
+            value = make()
+            self.put(dom, key, value)
+            return value
+
+    def put(self, dom: PoolDomain, key: Any, value: Any) -> Any:
+        """Admit an externally built artifact (callers with bespoke miss
+        accounting — the engine's compile counters — insert through here
+        so eviction bookkeeping stays coherent)."""
+        with LOCK:
+            dom.cache[key] = value
+            dom.seq[key] = next(self._seq)
+            self._enforce(dom)
+        return value
+
+    # -- eviction ------------------------------------------------------------
+
+    def _evict_oldest(self, dom: PoolDomain) -> None:
+        key = next(iter(dom.cache))
+        dom.cache.pop(key)
+        dom.seq.pop(key, None)
+        dom.stats["evictions"] += 1
+        if dom.mirror is not None:
+            dom.mirror["evictions"] = dom.mirror.get("evictions", 0) + 1
+
+    def _enforce(self, dom: PoolDomain) -> None:
+        while dom.cap is not None and len(dom.cache) > dom.cap:
+            self._evict_oldest(dom)
+        cap = pool_cap() if self._cap is None else self._cap
+        if cap is None:
+            return
+        while self.executables() > cap:
+            victim = min(
+                (d for d in self._domains.values()
+                 if d.kind == "executable" and d.cache),
+                key=lambda d: d.oldest_seq())
+            self._evict_oldest(victim)
+
+    def clear(self, name: Optional[str] = None) -> None:
+        """Drop every artifact of domain ``name`` (or of every domain)."""
+        with LOCK:
+            doms = ([self._domains[name]] if name is not None
+                    else list(self._domains.values()))
+            for d in doms:
+                d.cache.clear()
+                d.seq.clear()
+
+    # -- introspection -------------------------------------------------------
+
+    def executables(self) -> int:
+        return sum(len(d.cache) for d in self._domains.values()
+                   if d.kind == "executable")
+
+    def stats(self) -> Dict[str, Any]:
+        """Pool-wide + per-domain sizes, hit/miss/eviction counters and
+        hit rates — the single cold-vs-warm report the serving bench and
+        the eviction-pressure tests read."""
+        with LOCK:
+            domains = {}
+            totals = {"hits": 0, "misses": 0, "evictions": 0}
+            for name, d in sorted(self._domains.items()):
+                domains[name] = {"kind": d.kind, "size": len(d.cache),
+                                 "cap": d.cap, **d.stats,
+                                 "hit_rate": hit_rate(d.stats)}
+                for k in totals:
+                    totals[k] += d.stats[k]
+            return {
+                "domains": domains,
+                "executables": self.executables(),
+                "artifacts": sum(len(d.cache)
+                                 for d in self._domains.values()),
+                "pool_cap": pool_cap() if self._cap is None else self._cap,
+                **totals,
+                "hit_rate": hit_rate(totals),
+            }
+
+    # -- warmup --------------------------------------------------------------
+
+    def warmup(self, specs, stack: Any = "openmp",
+               bucket_sizes: Tuple[int, ...] = (1,),
+               batch: bool = False) -> Dict[str, int]:
+        """Pre-compile the declared working set: for every spec/DAG in
+        ``specs``, the population-lowered plan plus one executable per
+        requested serve bucket size on ``stack`` (``1`` = the unbatched
+        parametric form, ``n > 1`` = the vmapped request-batch form; see
+        :meth:`repro.api.stack.Stack.serve_batch`).  Idempotent — already
+        warm entries cost a cache hit.  Returns how many artifacts were
+        actually compiled, so a serving process can assert its steady
+        state starts at zero retraces."""
+        import jax
+        import jax.numpy as jnp
+
+        from ..api.stack import _extract_dag, get_stack
+        from . import schedule as plans
+        if isinstance(stack, str):
+            stack = get_stack(stack)
+        compiled = 0
+        structures = 0
+        rng = jax.random.PRNGKey(0)
+        for spec in specs:
+            dag = _extract_dag(spec)
+            if dag is None:
+                raise TypeError(f"warmup needs DAG working-set entries "
+                                f"(ProxySpec/ProxyDAG/ProxyBenchmark), got "
+                                f"{type(spec).__name__}")
+            plan = plans.lower_population(dag)
+            structures += 1
+            sizes = sorted(set(int(b) for b in bucket_sizes))
+            if batch:
+                sizes.append(0)    # sentinel: the rng-batched form
+            for b in sizes:
+                m0 = stack.exec_domain().stats["misses"]
+                # jit compiles at first *call*, so warmup must execute
+                # each form once with representative (template) params —
+                # that trace is the one the steady state then never pays
+                dyn = dag.dynamic_params()
+                if b == 0:
+                    fn = stack._compiled_plan(plan, batch=True)
+                    out = fn(rng[None], dyn)
+                elif b <= 1:
+                    fn = stack._compiled_plan(plan, batch=False)
+                    out = fn(rng, dyn)
+                else:
+                    fn = stack._compiled_plan_serve(plan, b)
+                    rngs = jax.random.split(rng, b)
+                    dynb = jax.tree_util.tree_map(
+                        lambda v: jnp.stack([jnp.asarray(v)] * b), dyn)
+                    out = fn(rngs, dynb)
+                jax.block_until_ready(out)
+                compiled += stack.exec_domain().stats["misses"] - m0
+        return {"structures": structures, "compiles": compiled}
+
+
+#: the process-wide pool every subsystem registers with by default
+_POOL = ExecutablePool()
+
+
+def get_pool() -> ExecutablePool:
+    return _POOL
+
+
+def pool_stats() -> Dict[str, Any]:
+    """Shorthand for ``get_pool().stats()``."""
+    return _POOL.stats()

@@ -55,9 +55,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .cachetools import cached_get
 from .dag import (Edge, ProxyDAG, _accumulate, _edge_out, _gather_inputs,
                   _init_sources, _terminals)
+from .pool import get_pool
 from .dwarfs import get_component
 from .dwarfs.base import fit_buffer
 
@@ -550,6 +550,11 @@ _PLAN_CACHE: Dict[Tuple, ExecutionPlan] = {}
 _PLAN_CACHE_CAP = 512
 _PLAN_STATS = {"hits": 0, "misses": 0}
 
+#: the plan cache is a pool domain like every other compiled-artifact
+#: cache; lookups mirror into _PLAN_STATS so plan_stats() keeps working
+_PLAN_DOM = get_pool().register("plans", _PLAN_CACHE, kind="plan",
+                                cap=_PLAN_CACHE_CAP, mirror=_PLAN_STATS)
+
 
 def plan_stats() -> Dict[str, int]:
     return dict(_PLAN_STATS)
@@ -561,7 +566,7 @@ def reset_plan_stats() -> None:
 
 
 def clear_plan_cache() -> None:
-    _PLAN_CACHE.clear()
+    get_pool().clear("plans")
 
 
 def _lower(dag: ProxyDAG, threshold: float) -> ExecutionPlan:
@@ -601,5 +606,4 @@ def lower(dag: ProxyDAG, threshold: Optional[float] = None,
     if not cache:
         return _lower(dag, thr)
     key = (dag.canonical_structure_key(), thr)
-    return cached_get(_PLAN_CACHE, key, lambda: _lower(dag, thr),
-                      _PLAN_STATS, _PLAN_CACHE_CAP)
+    return get_pool().get(_PLAN_DOM, key, lambda: _lower(dag, thr))

@@ -107,6 +107,28 @@ def bucket_shardings(mesh: Mesh, bucket_dynb: Any,
     return population_shardings(mesh, bucket_dynb, prefer=prefer)
 
 
+def serve_shardings(mesh: Mesh, rngs: Any, dyn_batched: Any,
+                    prefer: Tuple[str, ...] = ("pod", "data")
+                    ) -> Tuple[NamedSharding, Any]:
+    """Placement for a serving micro-batch: unlike a population (one
+    shared rng, candidate-batched dyn), every request carries its own rng,
+    so the rng batch and the dyn pytree share one leading *request* axis
+    and must partition together — request ``i``'s rng and params land on
+    the same device.  Returns ``(rng_sharding, dyn_shardings)``; both
+    replicate when the chunk size does not divide the preferred axes."""
+    shape = getattr(rngs, "shape", ())
+    ax = (candidate_spec_axis(mesh, int(shape[0]), prefer)
+          if len(shape) >= 1 else None)
+    if ax is None:
+        rng_s = NamedSharding(mesh, P())
+        dyn_s = jax.tree.map(lambda x: NamedSharding(mesh, P()),
+                             dyn_batched)
+    else:
+        rng_s = NamedSharding(mesh, P(ax, *([None] * (len(shape) - 1))))
+        dyn_s = population_shardings(mesh, dyn_batched, prefer=prefer)
+    return rng_s, dyn_s
+
+
 # ---------------------------------------------------------------------------
 # Parameter specs
 # ---------------------------------------------------------------------------

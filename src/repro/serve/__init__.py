@@ -1,1 +1,4 @@
+from .engine import (ArrivalTrace, ProxyRequest, ResourceMonitor,
+                     ServeReport, ServingEngine, burst_trace, poisson_trace,
+                     serve)
 from .serve_step import generate, make_decode_step, make_prefill_step

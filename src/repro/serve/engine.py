@@ -1,0 +1,538 @@
+"""Proxy serving engine: concurrent request streams with tail-latency SLOs.
+
+The paper's proxies stand in for production big-data services, and Gao et
+al. (arXiv 1802.00699) frame dwarf proxies explicitly as *service-level*
+workload mimics — but a benchmark that only ever executes one proxy at a
+time cannot report the metrics a service is judged by: latency
+percentiles under load, time to first result, sustained throughput.  This
+module closes that gap on top of the compile-once/run-many machinery:
+
+* A request **queue** admits heterogeneous :class:`ProxyRequest`\\ s (any
+  structure + per-request dynamic params + per-request rng) and groups
+  them by compiled identity — ``(stack, plan.structure_key())`` — into
+  per-structure FIFO lanes.
+* The dispatch loop drains the lane with the oldest waiting head into a
+  **micro-batch** (up to ``max_batch`` requests), stratifies it by the
+  engine cost model, and executes it in fixed-size chunks through the
+  stack's cached serve executables (``Stack._compiled_plan_serve`` — one
+  vmapped call per chunk, every request its own rng/params lane).  Chunk
+  sizes never vary (the tail pads by repeating its last request), so
+  steady-state serving is **zero retraces**, at most one compile per new
+  (structure, chunk size) — and :meth:`ServingEngine.warmup` pre-pays
+  even those through the :class:`~repro.core.pool.ExecutablePool`.
+* Every request's queue wait, service time and total latency are
+  recorded; the :class:`ServeReport` emits P50/P95/P99, time to first
+  result, sustained throughput, the micro-batch histogram, cold-dispatch
+  accounting and a :class:`ResourceMonitor` host/device-memory summary.
+
+Two clocks make runs comparable and CI-gateable:
+
+* ``clock="wall"`` executes for real; service times are measured.
+* ``clock="virtual"`` never executes — service times come from the
+  engine's deterministic per-candidate cost model
+  (:meth:`ExecutionPlan.candidate_costs`), so the same trace yields
+  bit-identical percentiles on any machine, any number of times.  The
+  queue dynamics (admission order, grouping, batching) are exactly the
+  wall-clock loop's.
+
+Arrival traces are seeded and deterministic: :func:`poisson_trace` (open
+loop — arrivals don't wait for completions) and :func:`burst_trace`
+(synchronized waves; ``bursts=1`` is the capacity test where everything
+arrives at once).  ``mode="closed"`` serves any trace closed-loop: each
+request is admitted only when the previous one completes — the
+sequential baseline micro-batching is judged against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..api.stack import Stack, get_stack, CACHE_STATS
+from ..core import schedule as plans
+from ..core.dag import ProxyDAG
+from ..core.pool import ExecutablePool, get_pool
+
+#: virtual-clock calibration: modeled cost units (flops + vpu + bytes)
+#: retired per second, plus a fixed per-dispatch overhead — the absolute
+#: scale is arbitrary; percentile *structure* under the queueing dynamics
+#: is what the deterministic clock exists for
+VIRTUAL_RATE = 5.0e10
+VIRTUAL_OVERHEAD_S = 2.0e-4
+
+
+# ---------------------------------------------------------------------------
+# requests + traces
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ProxyRequest:
+    """One admission: a proxy structure, its dynamic params, its rng."""
+
+    rid: int                   # position in the trace (result ordering)
+    structure: str             # spec name / label (reporting only)
+    dag: ProxyDAG              # shared per-structure template
+    dyn: Any                   # unbatched dynamic_params()-shaped pytree
+    rng: jax.Array
+    arrival_s: float           # arrival offset from trace start
+
+
+@dataclasses.dataclass
+class ArrivalTrace:
+    """A deterministic, seeded request stream."""
+
+    name: str
+    seed: int
+    requests: List[ProxyRequest]
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+    def __iter__(self):
+        return iter(self.requests)
+
+    @property
+    def structures(self) -> List[str]:
+        return sorted({r.structure for r in self.requests})
+
+    def unique_dags(self) -> List[ProxyDAG]:
+        """One template per distinct structure — the warmup working set."""
+        seen, dags = set(), []
+        for r in self.requests:
+            key = r.dag.canonical_structure_key()
+            if key not in seen:
+                seen.add(key)
+                dags.append(r.dag)
+        return dags
+
+
+def _templates(mix: Optional[Sequence[str]]):
+    """(name, dag, space, base_values) per spec in the request mix."""
+    from ..api.params import ParamSpace
+    from ..api.spec import ProxySpec
+    from ..core.workloads import PROXY_SPECS
+    names = tuple(mix) if mix else tuple(sorted(PROXY_SPECS))
+    out = []
+    for name in names:
+        if name not in PROXY_SPECS:
+            raise KeyError(f"unknown proxy spec {name!r}; known: "
+                           f"{sorted(PROXY_SPECS)}")
+        dag = ProxySpec.from_json(PROXY_SPECS[name]).to_benchmark().dag
+        space = ParamSpace.from_dag(dag)
+        out.append((name, dag, space, space.values(dag)))
+    return out
+
+
+def _make_request(i: int, tmpl, seed: int, arrival: float) -> ProxyRequest:
+    name, dag, space, base = tmpl
+    row = space.sample_dynamic(1, base, seed=seed + 7919 * i)[0]
+    dynb = space.stack_candidates(dag, row[None])
+    dyn = jax.tree_util.tree_map(lambda v: v[0], dynb)
+    return ProxyRequest(
+        rid=i, structure=name, dag=dag, dyn=dyn,
+        rng=jax.random.fold_in(jax.random.PRNGKey(seed), i),
+        arrival_s=float(arrival))
+
+
+def poisson_trace(n: int = 32, rate_rps: float = 100.0, seed: int = 0,
+                  mix: Optional[Sequence[str]] = None) -> ArrivalTrace:
+    """Open-loop Poisson arrivals at ``rate_rps``, request mix drawn
+    uniformly from ``mix`` (default: every ``PROXY_SPECS`` proxy), every
+    request's dynamic params independently sampled from its structure's
+    :class:`~repro.api.params.ParamSpace` — all under one seed, so the
+    trace is bit-reproducible across processes and machines."""
+    rs = np.random.RandomState(seed)
+    arrivals = np.cumsum(rs.exponential(1.0 / max(rate_rps, 1e-9), size=n))
+    tmpl = _templates(mix)
+    picks = rs.randint(0, len(tmpl), size=n)
+    return ArrivalTrace(
+        name=f"poisson:n={n}:rate={rate_rps:g}:seed={seed}", seed=seed,
+        requests=[_make_request(i, tmpl[picks[i]], seed, arrivals[i])
+                  for i in range(n)])
+
+
+def burst_trace(n: int = 32, bursts: int = 4, period_s: float = 0.05,
+                seed: int = 0,
+                mix: Optional[Sequence[str]] = None) -> ArrivalTrace:
+    """Synchronized arrival waves: ``n`` requests split evenly across
+    ``bursts`` bursts ``period_s`` apart (every member of a burst arrives
+    at the same instant — the tail-latency stressor Poisson smoothing
+    hides).  ``bursts=1`` is the capacity trace: everything at t=0."""
+    rs = np.random.RandomState(seed)
+    tmpl = _templates(mix)
+    picks = rs.randint(0, len(tmpl), size=n)
+    per = max(1, -(-n // max(bursts, 1)))        # ceil split
+    return ArrivalTrace(
+        name=f"burst:n={n}:bursts={bursts}:seed={seed}", seed=seed,
+        requests=[_make_request(i, tmpl[picks[i]], seed,
+                                (i // per) * period_s)
+                  for i in range(n)])
+
+
+# ---------------------------------------------------------------------------
+# resource monitor
+# ---------------------------------------------------------------------------
+
+
+def _page_size() -> int:
+    try:
+        return os.sysconf("SC_PAGE_SIZE")
+    except (AttributeError, ValueError, OSError):  # pragma: no cover
+        return 4096
+
+
+class ResourceMonitor(threading.Thread):
+    """Daemon thread sampling host RSS (``/proc/self/statm``) and device
+    memory (``Device.memory_stats``, where the backend exposes it) while a
+    serve runs — no psutil dependency, negligible overhead."""
+
+    def __init__(self, interval_s: float = 0.005):
+        super().__init__(daemon=True)
+        self.interval_s = interval_s
+        self._halt = threading.Event()
+        self.host_rss: List[int] = []
+        self.device_bytes: List[int] = []
+
+    def _sample(self) -> None:
+        try:
+            with open("/proc/self/statm") as f:
+                self.host_rss.append(
+                    int(f.read().split()[1]) * _page_size())
+        except (OSError, ValueError, IndexError):  # pragma: no cover
+            pass
+        try:
+            ms = jax.local_devices()[0].memory_stats()
+            if ms and "bytes_in_use" in ms:
+                self.device_bytes.append(int(ms["bytes_in_use"]))
+        except Exception:           # CPU backends expose no memory_stats
+            pass
+
+    def run(self) -> None:
+        while not self._halt.is_set():
+            self._sample()
+            self._halt.wait(self.interval_s)
+
+    def stop(self) -> Dict[str, float]:
+        self._halt.set()
+        self.join(timeout=2.0)
+        self._sample()              # at least one sample, however short
+        out: Dict[str, float] = {
+            "samples": float(len(self.host_rss)),
+            "host_rss_peak_bytes": float(max(self.host_rss, default=0)),
+            "host_rss_mean_bytes": float(np.mean(self.host_rss))
+            if self.host_rss else 0.0,
+        }
+        if self.device_bytes:
+            out["device_peak_bytes"] = float(max(self.device_bytes))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# ServeReport
+# ---------------------------------------------------------------------------
+
+
+def _percentiles(xs: Sequence[float]) -> Dict[str, float]:
+    if not xs:
+        return {k: 0.0 for k in ("p50", "p95", "p99", "mean", "max")}
+    a = np.asarray(xs, np.float64)
+    return {"p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean()), "max": float(a.max())}
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Uniform result of one served trace — the SLO surface."""
+
+    stack: str
+    clock: str                      # "wall" | "virtual"
+    mode: str                       # "open" | "closed"
+    n_requests: int
+    structures: int                 # distinct compiled groups served
+    makespan_s: float               # first arrival -> last completion
+    throughput_rps: float           # n_requests / makespan
+    time_to_first_result_s: float
+    latency_s: Dict[str, float]     # p50/p95/p99/mean/max end-to-end
+    queue_wait_s: Dict[str, float]  # arrival -> dispatch start
+    service_s: Dict[str, float]     # dispatch chunk execution
+    batch_hist: Dict[int, int]      # micro-batch size -> dispatch count
+    dispatches: int                 # executable calls (chunks)
+    cold_dispatches: int            # chunks that compiled first
+    compile_s: float                # wall time of cold chunks (compile-
+                                    # inclusive service; 0 when warm)
+    retraces: int                   # CACHE_STATS trace delta (wall clock)
+    resources: Dict[str, float]
+    #: per-request host results in trace order (bit-identity checks);
+    #: empty under the virtual clock
+    results: List[Any] = dataclasses.field(default_factory=list, repr=False)
+
+    def to_json(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d.pop("results")
+        d["batch_hist"] = {str(k): v
+                           for k, v in sorted(self.batch_hist.items())}
+        return d
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine
+# ---------------------------------------------------------------------------
+
+
+class ServingEngine:
+    """Continuous micro-batching over one software stack.
+
+    ``max_batch`` bounds how many same-structure requests one dispatch
+    drains; ``bucket_size`` pins the executable chunk size (default: the
+    population policy — one lane per device, so a single-device CPU
+    serves unbatched parametric calls and a mesh fills its device axis).
+    All compiled artifacts live in the shared :class:`ExecutablePool`;
+    :meth:`warmup` pre-compiles a declared working set so the first
+    request is served warm."""
+
+    def __init__(self, stack: Union[str, Stack] = "openmp",
+                 max_batch: int = 8, bucket_size: Optional[int] = None,
+                 pool: Optional[ExecutablePool] = None):
+        self.stack = get_stack(stack) if isinstance(stack, str) else stack
+        self.max_batch = max(1, int(max_batch))
+        self.bucket_size = bucket_size
+        self.pool = pool if pool is not None else get_pool()
+
+    # -- sizing --------------------------------------------------------------
+
+    def _chunk_size(self) -> int:
+        """The fixed executable chunk size.  Fixed — never shrunk to a
+        small batch (tails pad instead) — so the steady state needs
+        exactly one executable per (structure, size)."""
+        if self.bucket_size is not None:
+            return max(1, min(int(self.bucket_size), self.max_batch))
+        return max(1, min(plans.resolve_bucket_size(self.max_batch),
+                          self.max_batch))
+
+    # -- warmup --------------------------------------------------------------
+
+    def warmup(self, specs, bucket_sizes: Optional[Tuple[int, ...]] = None
+               ) -> Dict[str, int]:
+        """Pre-compile the working set: every distinct structure in
+        ``specs`` (an :class:`ArrivalTrace`, request list, or
+        DAG/spec iterable) at this engine's chunk sizes — after which a
+        serve of those structures starts at zero retraces."""
+        if isinstance(specs, ArrivalTrace):
+            specs = specs.unique_dags()
+        else:
+            specs = list(specs)
+            if specs and isinstance(specs[0], ProxyRequest):
+                specs = ArrivalTrace("adhoc", 0, specs).unique_dags()
+        if bucket_sizes is None:
+            bucket_sizes = (1, self._chunk_size())
+        return self.pool.warmup(specs, stack=self.stack,
+                                bucket_sizes=bucket_sizes)
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _dispatch(self, plan, chunk: List[ProxyRequest], valid: int,
+                  b: int, execute: bool,
+                  costs: Dict[int, float]) -> Tuple[float, bool, List]:
+        """Execute (or, under the virtual clock, model) one fixed-size
+        chunk.  Returns ``(service_s, was_cold, per-request results)``."""
+        stack = self.stack
+        if not execute:
+            service = (max(costs[r.rid] for r in chunk[:valid])
+                       / VIRTUAL_RATE + VIRTUAL_OVERHEAD_S)
+            return service, False, []
+        m0 = stack.exec_domain().stats["misses"]
+        t0 = time.perf_counter()
+        if b == 1:
+            fn = stack._compiled_plan(plan, batch=False)
+            r = chunk[0]
+            # copy the dyn scalars: the batch=False form donates its dyn
+            # buffers on accelerators, and a trace may be replayed
+            dyn = jax.tree_util.tree_map(jnp.array, r.dyn)
+            out, _ = stack._population_call(fn, r.rng, dyn)
+        else:
+            fn = stack._compiled_plan_serve(plan, b)
+            rngs = jnp.stack([r.rng for r in chunk])
+            dynb = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+                *[r.dyn for r in chunk])
+            out = stack._serve_call(fn, rngs, dynb)
+        jax.block_until_ready(out)
+        service = time.perf_counter() - t0
+        was_cold = stack.exec_domain().stats["misses"] > m0
+        host = np.asarray(out)
+        results = ([host] if b == 1
+                   else [host[j] for j in range(valid)])
+        return service, was_cold, results
+
+    # -- serving loop --------------------------------------------------------
+
+    def serve(self, trace: Union[ArrivalTrace, Sequence[ProxyRequest]],
+              clock: str = "wall", mode: str = "open") -> ServeReport:
+        """Serve every request of ``trace`` and report the SLO metrics.
+
+        ``clock="wall"`` executes and measures; ``clock="virtual"`` is the
+        deterministic cost-model simulation (no execution, identical
+        reports across runs).  ``mode="open"`` admits requests at their
+        trace arrival times; ``mode="closed"`` admits each request only
+        when the previous completes (the sequential baseline — batch size
+        is pinned to 1)."""
+        if clock not in ("wall", "virtual"):
+            raise ValueError(f"clock must be 'wall' or 'virtual', "
+                             f"got {clock!r}")
+        if mode not in ("open", "closed"):
+            raise ValueError(f"mode must be 'open' or 'closed', "
+                             f"got {mode!r}")
+        requests = list(trace.requests if isinstance(trace, ArrivalTrace)
+                        else trace)
+        execute = clock == "wall"
+        closed = mode == "closed"
+        stack = self.stack
+
+        # group requests by compiled identity; model per-request costs
+        # once (the stratification and virtual-service key)
+        groups: Dict[Tuple, Dict[str, Any]] = {}
+        gkey_of: Dict[int, Tuple] = {}
+        costs: Dict[int, float] = {}
+        for r in requests:
+            plan = plans.lower_population(r.dag)
+            gkey = (stack.name, plan.structure_key())
+            if gkey not in groups:
+                groups[gkey] = {"plan": plan, "queue": deque()}
+            gkey_of[r.rid] = gkey
+            dynb1 = jax.tree_util.tree_map(
+                lambda v: np.asarray(v)[None], r.dyn)
+            c, _ = plan.candidate_costs(dynb1)
+            costs[r.rid] = float(c[0])
+
+        monitor = ResourceMonitor()
+        monitor.start()
+        traces0 = CACHE_STATS["traces"]
+
+        pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        first_arrival = pending[0].arrival_s if pending else 0.0
+        b = 1 if closed else self._chunk_size()
+        max_batch = 1 if closed else self.max_batch
+
+        lat: Dict[int, float] = {}
+        qwait: Dict[int, float] = {}
+        svc: Dict[int, float] = {}
+        results: Dict[int, Any] = {}
+        batch_hist: Dict[int, int] = {}
+        dispatches = cold_dispatches = 0
+        compile_s = 0.0
+        first_done: Optional[float] = None
+        now = first_arrival
+        i_next = 0
+
+        def admit(t: float) -> None:
+            nonlocal i_next
+            while (i_next < len(pending)
+                   and pending[i_next].arrival_s <= t + 1e-12):
+                r = pending[i_next]
+                i_next += 1
+                groups[gkey_of[r.rid]]["queue"].append(r)
+
+        while i_next < len(pending) or any(g["queue"]
+                                           for g in groups.values()):
+            if closed:
+                # closed loop: next request becomes ready the instant the
+                # previous completes — its trace arrival is ignored
+                if not any(g["queue"] for g in groups.values()):
+                    r = pending[i_next]
+                    i_next += 1
+                    groups[gkey_of[r.rid]]["queue"].append(r)
+            else:
+                admit(now)
+                if not any(g["queue"] for g in groups.values()):
+                    now = max(now, pending[i_next].arrival_s)
+                    continue
+            # drain the lane whose head has waited longest
+            gkey = min(
+                (k for k, g in groups.items() if g["queue"]),
+                key=lambda k: (groups[k]["queue"][0].arrival_s,
+                               groups[k]["queue"][0].rid))
+            g = groups[gkey]
+            k = min(max_batch, len(g["queue"]))
+            batch = [g["queue"].popleft() for _ in range(k)]
+            batch_hist[k] = batch_hist.get(k, 0) + 1
+            start = now
+            # stratify by modeled cost so a chunk's vmapped lanes share a
+            # trip bound (cheap requests never wait out a straggler lane)
+            order = sorted(batch, key=lambda r: (costs[r.rid], r.rid))
+            service_acc = 0.0
+            for c0 in range(0, len(order), b):
+                chunk = order[c0:c0 + b]
+                valid = len(chunk)
+                while len(chunk) < b:        # fixed chunk size: pad by
+                    chunk.append(chunk[-1])  # repeating the last request
+                service, was_cold, outs = self._dispatch(
+                    g["plan"], chunk, valid, b, execute, costs)
+                dispatches += 1
+                if was_cold:
+                    cold_dispatches += 1
+                    compile_s += service
+                service_acc += service
+                done_t = start + service_acc
+                if first_done is None:
+                    first_done = done_t
+                for j, r in enumerate(chunk[:valid]):
+                    qwait[r.rid] = start - (r.arrival_s
+                                            if not closed else start)
+                    svc[r.rid] = service
+                    lat[r.rid] = done_t - (r.arrival_s
+                                           if not closed else start)
+                    if outs:
+                        results[r.rid] = outs[j]
+            now = start + service_acc
+
+        resources = monitor.stop()
+        makespan = max(now - first_arrival, 0.0)
+        n = len(requests)
+        return ServeReport(
+            stack=stack.name, clock=clock, mode=mode, n_requests=n,
+            structures=len(groups),
+            makespan_s=makespan,
+            throughput_rps=n / max(makespan, 1e-12),
+            time_to_first_result_s=(first_done - first_arrival
+                                    if first_done is not None else 0.0),
+            latency_s=_percentiles([lat[r.rid] for r in requests]),
+            queue_wait_s=_percentiles([qwait[r.rid] for r in requests]),
+            service_s=_percentiles([svc[r.rid] for r in requests]),
+            batch_hist=batch_hist,
+            dispatches=dispatches,
+            cold_dispatches=cold_dispatches,
+            compile_s=compile_s,
+            retraces=CACHE_STATS["traces"] - traces0 if execute else 0,
+            resources=resources,
+            results=[results.get(r.rid) for r in requests])
+
+
+# ---------------------------------------------------------------------------
+# public entry point (repro.api.serve)
+# ---------------------------------------------------------------------------
+
+
+def serve(trace: Union[ArrivalTrace, Sequence[ProxyRequest]], *,
+          stack: Union[str, Stack] = "openmp", clock: str = "wall",
+          mode: str = "open", max_batch: int = 8,
+          bucket_size: Optional[int] = None,
+          warmup: bool = True) -> ServeReport:
+    """Serve a request stream end to end: build a :class:`ServingEngine`
+    on ``stack``, optionally pre-compile the trace's working set, and
+    return the :class:`ServeReport`."""
+    eng = ServingEngine(stack=stack, max_batch=max_batch,
+                        bucket_size=bucket_size)
+    if warmup and clock == "wall":
+        eng.warmup(trace)
+    return eng.serve(trace, clock=clock, mode=mode)

@@ -1,0 +1,69 @@
+"""Thread-safety + accounting contract of the shared cache plumbing.
+
+The population path dispatches strata over the ``REPRO_POP_WORKERS`` host
+thread pool and the serving engine admits requests concurrently, so
+``cached_get``/``evict_oldest`` must be atomic: one build per key under
+racing misses, coherent stats, no double-pop on eviction."""
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from repro.core.cachetools import cached_get, evict_oldest, hit_rate
+
+
+def test_concurrent_cached_get_builds_once_per_key():
+    cache, stats, built = {}, {}, []
+
+    def make(key):
+        def _build():
+            built.append(key)           # append is atomic; order irrelevant
+            time.sleep(0.002)           # widen the would-be race window
+            return ("value", key)
+        return _build
+
+    keys = [f"k{i}" for i in range(8)]
+    with ThreadPoolExecutor(max_workers=16) as pool:
+        futs = [pool.submit(cached_get, cache, keys[i % 8],
+                            make(keys[i % 8]), stats)
+                for i in range(400)]
+        results = [f.result() for f in futs]
+
+    # every key built exactly once despite 50 racing lookups apiece
+    assert sorted(built) == sorted(keys)
+    assert len(cache) == 8
+    assert all(results[i] == ("value", keys[i % 8]) for i in range(400))
+    assert stats["misses"] == 8
+    assert stats["hits"] == 400 - 8
+    assert hit_rate(stats) == (400 - 8) / 400
+
+
+def test_concurrent_eviction_under_cap_stays_coherent():
+    cache, stats = {}, {}
+
+    def lookup(i):
+        key = f"k{i}"
+        return cached_get(cache, key, lambda: i, stats, cap=16)
+
+    with ThreadPoolExecutor(max_workers=16) as pool:
+        list(pool.map(lookup, range(300)))
+
+    # cap respected, and the books balance: every insert beyond the
+    # retained set was evicted exactly once
+    assert len(cache) <= 16
+    assert stats["misses"] == 300
+    assert stats["evictions"] == 300 - len(cache)
+
+
+def test_evict_oldest_drops_fifo_and_counts():
+    cache = {k: k for k in "abcdef"}
+    stats = {}
+    dropped = evict_oldest(cache, 2, stats)
+    assert dropped == 4
+    assert list(cache) == ["e", "f"]    # oldest-inserted went first
+    assert stats["evictions"] == 4
+    assert evict_oldest(cache, None, stats) == 0   # uncapped: no-op
+
+
+def test_hit_rate_edge_cases():
+    assert hit_rate({}) == 0.0
+    assert hit_rate({"hits": 3, "misses": 1}) == 0.75
