@@ -27,6 +27,11 @@ Two further gates ride on top:
   (``steady_state_retraces == 0``, hard gate) and its micro-batch
   capacity ratio ``batch_speedup_x`` is baseline-gated like the
   population speedups (see :mod:`benchmarks.serve_bench`).
+* **serve_faults** — resilient serving under a seeded chaos plan
+  (injected executor failures + stragglers at ``REPRO_FAULT_RATE`` —
+  CI's ``chaos`` leg): hard gates ``lost_requests == 0`` and
+  ``steady_state_retraces == 0`` under injection, plus the seeded
+  virtual-clock chaos run must be bit-reproducible.
 """
 
 from __future__ import annotations
@@ -54,7 +59,7 @@ from repro.core.structsearch import (StructuralTuner,
 from repro.core.workloads import PROXY_SPECS
 
 from .common import ROOT, csv_row
-from .serve_bench import bench_serve_sweep
+from .serve_bench import bench_serve_faults, bench_serve_sweep
 
 BENCH_JSON = ROOT / "BENCH_engine.json"
 
@@ -570,6 +575,7 @@ def bench_compile_vs_run() -> List[str]:
     plan_sweep = bench_plan_sweep()
     structure = bench_structure_sweep()
     serve = bench_serve_sweep()
+    serve_faults = bench_serve_faults()
     failures = []
     if serve["steady_state_retraces"] > 0:
         failures.append(
@@ -577,6 +583,21 @@ def bench_compile_vs_run() -> List[str]:
             f"(serving compile-once contract broken: a warmed request "
             f"stream retraced)")
     failures += _serve_baseline_regressions(serve, baseline)
+    if serve_faults["lost_requests"] > 0:
+        failures.append(
+            f"serve_faults.lost_requests={serve_faults['lost_requests']} "
+            f"(a request vanished under injected failures — the zero-loss "
+            f"invariant is broken)")
+    if serve_faults["steady_state_retraces"] > 0:
+        failures.append(
+            f"serve_faults.steady_state_retraces="
+            f"{serve_faults['steady_state_retraces']} (injected failures "
+            f"and stragglers must recover without retracing)")
+    if not serve_faults["virtual_chaos_deterministic"]:
+        failures.append(
+            "serve_faults.virtual_chaos_deterministic=False (the same "
+            "seeded FaultPlan produced two different virtual-clock "
+            "reports)")
     if population["population_retraces"] > 0:
         failures.append(
             f"population_retraces={population['population_retraces']:.0f} "
@@ -615,13 +636,14 @@ def bench_compile_vs_run() -> List[str]:
         "plan_sweep": plan_sweep,
         "structure_sweep": structure,
         "serve_sweep": serve,
+        "serve_faults": serve_faults,
         "gate_failures": failures,
         "engine_stats": engine.stats(),
         "stack_cache_stats": cache_stats(),
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=1) + "\n")
     rows = _csv_rows(run_path, sweep, tune, population, plan_sweep,
-                     structure, serve)
+                     structure, serve, serve_faults)
     if failures:
         for row in rows:           # the evidence still lands on failure
             print(row, flush=True)
@@ -630,7 +652,7 @@ def bench_compile_vs_run() -> List[str]:
 
 
 def _csv_rows(run_path, sweep, tune, population, plan_sweep,
-              structure, serve) -> List[str]:
+              structure, serve, serve_faults) -> List[str]:
     return [
         csv_row("engine/run_path", run_path["steady_state_s"] * 1e6,
                 f"first_s={run_path['first_call_s']:.3f};"
@@ -676,6 +698,17 @@ def _csv_rows(run_path, sweep, tune, population, plan_sweep,
                 f"batch_speedup={serve['batch_speedup_x']:.2f}x;"
                 f"retraces={serve['steady_state_retraces']};"
                 f"warmup_compiles={serve['warmup_compiles']}"),
+        csv_row("engine/serve_faults",
+                serve_faults["chaos_latency_p99_s"] * 1e6,
+                f"fault_rate={serve_faults['fault_rate']:g};"
+                f"lost={serve_faults['lost_requests']};"
+                f"failures={serve_faults['failures']};"
+                f"retries={serve_faults['retries']};"
+                f"retraces={serve_faults['steady_state_retraces']};"
+                f"flush_p99_win="
+                f"{serve_faults['flush_p99_improvement_x']:.2f}x;"
+                f"deterministic="
+                f"{serve_faults['virtual_chaos_deterministic']}"),
     ]
 
 

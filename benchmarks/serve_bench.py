@@ -28,11 +28,13 @@ Emitted as the ``serve_sweep`` section of ``BENCH_engine.json``:
 
 from __future__ import annotations
 
+import math
 import os
 from statistics import median
 from typing import Dict
 
 from repro.api.stack import OpenMPStack
+from repro.faults import FaultPlan, default_fault_rate
 from repro.serve.engine import ServingEngine, burst_trace, poisson_trace
 
 SERVE_MIX = ("terasort", "kmeans")
@@ -120,6 +122,81 @@ def bench_serve_sweep() -> Dict[str, object]:
     }
 
 
+def bench_serve_faults() -> Dict[str, object]:
+    """The ``serve_faults`` section: resilient serving under a seeded
+    chaos plan.
+
+    The injected executor-failure rate comes from ``REPRO_FAULT_RATE``
+    (CI's ``chaos`` matrix leg sets it; default 0.2 so the section always
+    exercises the recovery path), with stragglers at half that rate.
+    Eviction storms are deliberately **excluded** here: the run is gated
+    on ``steady_state_retraces == 0`` (injected failures and stragglers
+    must never force a recompile), and a storm's whole point is a
+    recompile — tests/test_serving_faults.py covers it separately.
+
+    Hard gates (enforced by benchmarks/compile_vs_run.py):
+    ``lost_requests == 0`` and ``steady_state_retraces == 0`` under
+    injection.  Also reports the partial-chunk timeout-flush P99 win on a
+    sparse trace (flush vs hold-until-full-chunk, deterministic virtual
+    clock) and a chaos bit-reproducibility check."""
+    fault_rate = default_fault_rate() or 0.2
+    stack = OpenMPStack()
+    eng = ServingEngine(stack=stack, max_batch=MAX_BATCH, bucket_size=BUCKET)
+    trace = poisson_trace(n=N_REQUESTS, rate_rps=RATE_RPS, seed=0,
+                          mix=SERVE_MIX)
+    plan = FaultPlan.sample(N_REQUESTS, seed=1, failure_rate=fault_rate,
+                            straggler_rate=fault_rate / 2)
+    eng.warmup(trace)
+    eng.serve(trace, clock="wall")              # warm pass, fault-free
+    chaos = eng.serve(trace, clock="wall", faults=plan)
+
+    # flush policy: sparse arrivals, full-chunk hold vs timeout flush
+    # (virtual clock — the machine-independent form of the P99 claim)
+    sparse = poisson_trace(n=N_REQUESTS, rate_rps=0.025, seed=2,
+                           mix=(SERVE_MIX[0],))
+    hold_eng = ServingEngine(stack=stack, max_batch=MAX_BATCH,
+                             bucket_size=MAX_BATCH,
+                             batch_wait_s=math.inf)
+    flush_eng = ServingEngine(stack=stack, max_batch=MAX_BATCH,
+                              bucket_size=MAX_BATCH, batch_wait_s=0.05)
+    hold = hold_eng.serve(sparse, clock="virtual")
+    flush = flush_eng.serve(sparse, clock="virtual")
+
+    # chaos determinism: same plan, virtual clock, twice
+    v1 = eng.serve(trace, clock="virtual", faults=plan)
+    v2 = eng.serve(trace, clock="virtual", faults=plan)
+    d1, d2 = v1.to_json(), v2.to_json()
+    d1.pop("resources"), d2.pop("resources")
+
+    return {
+        "fault_rate": fault_rate,
+        "requests": N_REQUESTS,
+        "fault_plan": plan.summary(),
+        # hard-gated invariants
+        "lost_requests": chaos.lost_requests,
+        "steady_state_retraces": chaos.retraces,
+        # recovery accounting
+        "failures": chaos.failures,
+        "retries": chaos.retries,
+        "status_counts": chaos.status_counts(),
+        "degraded_dispatches": chaos.degraded_dispatches,
+        "breaker_trips": chaos.breaker_trips,
+        "chaos_latency_p99_s": chaos.latency_s["p99"],
+        "chaos_throughput_rps": chaos.throughput_rps,
+        # partial-chunk timeout flush (virtual, deterministic)
+        "hold_p99_s": hold.latency_s["p99"],
+        "flush_p99_s": flush.latency_s["p99"],
+        "flush_p99_improvement_x": hold.latency_s["p99"]
+        / max(flush.latency_s["p99"], 1e-12),
+        "timeout_flushes": flush.timeout_flushes,
+        # seeded chaos must be bit-reproducible under the virtual clock
+        "virtual_chaos_deterministic": d1 == d2,
+        "pool_invalidations": stack.exec_domain().stats["invalidations"],
+        "pool_failures": stack.exec_domain().stats["failures"],
+    }
+
+
 if __name__ == "__main__":
     import json
-    print(json.dumps(bench_serve_sweep(), indent=1))
+    print(json.dumps({"serve_sweep": bench_serve_sweep(),
+                      "serve_faults": bench_serve_faults()}, indent=1))

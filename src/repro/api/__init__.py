@@ -31,10 +31,12 @@ from . import params as params  # imported first: no repro.core dependencies
 from .params import (CORE_FIELDS, EXTRA_BOUNDS, FIELD_BOUNDS, INT_FIELDS,
                      ParamLeaf, ParamSpace, bounds_for)
 from .spec import SPEC_VERSION, ProxySpec, SpecError, validate_spec_json
-from .stack import (HadoopStack, MPIStack, OpenMPStack, RunReport,
-                    SparkStack, Stack, cache_cap, cache_stats, get_stack,
+from .stack import (FAILURE_CLASSES, HadoopStack, MPIStack, OpenMPStack,
+                    RunReport, SparkStack, Stack, cache_cap, cache_stats,
+                    classify_failure, failure_is_retryable, get_stack,
                     list_stacks, register_stack, reset_cache_stats)
 from ..core.pool import ExecutablePool, get_pool, pool_stats
+from ..faults import FaultPlan, InjectedFailure, default_fault_rate
 
 
 def tune_structure(proxy, target_metrics, **kw):
@@ -68,7 +70,9 @@ def serve(trace, **kw):
     with :func:`repro.serve.poisson_trace` / :func:`repro.serve.burst_trace`
     — or a plain request list; keyword args configure the engine
     (``stack``, ``max_batch``, ``bucket_size``, ``clock``, ``mode``,
-    ``warmup``)."""
+    ``warmup``, ``batch_wait_s`` partial-chunk flush, ``faults`` — a
+    seeded :class:`~repro.faults.FaultPlan` for chaos runs — plus the
+    retry/backoff/circuit-breaker knobs)."""
     from ..serve.engine import serve as _serve
     return _serve(trace, **kw)
 
@@ -81,4 +85,6 @@ __all__ = [
     "Stack", "cache_cap", "cache_stats", "get_stack", "list_stacks",
     "register_stack", "reset_cache_stats", "tune_structure",
     "ExecutablePool", "get_pool", "pool_stats", "serve",
+    "FAILURE_CLASSES", "classify_failure", "failure_is_retryable",
+    "FaultPlan", "InjectedFailure", "default_fault_rate",
 ]

@@ -47,6 +47,7 @@ from ..core import schedule as plans
 from ..core.cachetools import hit_rate
 from ..core.dag import ProxyDAG
 from ..core.pool import get_pool
+from ..kernels.dispatch import backend_override
 
 
 # ---------------------------------------------------------------------------
@@ -106,6 +107,43 @@ def _donate_argnums() -> Tuple[int, ...]:
     # donate the dynamic-param buffers (rebuilt fresh per call); CPU has no
     # donation support, so skip it there to avoid per-compile warnings
     return () if jax.default_backend() == "cpu" else (1,)
+
+
+# ---------------------------------------------------------------------------
+# Failure classification (the serving engine's retry policy input)
+# ---------------------------------------------------------------------------
+
+#: classes ``classify_failure`` can return; everything but "fatal" is
+#: retryable (a re-dispatch can plausibly succeed)
+FAILURE_CLASSES = ("injected", "resource", "fatal", "transient")
+
+
+def classify_failure(exc: BaseException) -> str:
+    """Classify an executable-dispatch exception for the retry policy.
+
+    * ``"injected"`` — a :class:`repro.faults.InjectedFailure` (chaos
+      testing); retryable by construction.
+    * ``"resource"``  — allocation / OOM-shaped runtime errors; retryable
+      after degradation (smaller chunks, evicted executables).
+    * ``"fatal"``     — caller bugs (bad types/shapes/keys); retrying the
+      identical dispatch cannot succeed, fail the request terminally.
+    * ``"transient"`` — everything else (backend hiccups); retryable.
+    """
+    from ..faults import InjectedFailure
+    if isinstance(exc, InjectedFailure):
+        return "injected"
+    msg = str(exc).upper()
+    if ("RESOURCE_EXHAUSTED" in msg or "OUT OF MEMORY" in msg
+            or "OOM" in msg or isinstance(exc, MemoryError)):
+        return "resource"
+    if isinstance(exc, (TypeError, ValueError, KeyError, IndexError,
+                        AttributeError)):
+        return "fatal"
+    return "transient"
+
+
+def failure_is_retryable(exc: BaseException) -> bool:
+    return classify_failure(exc) != "fatal"
 
 
 # ---------------------------------------------------------------------------
@@ -241,12 +279,21 @@ class Stack(abc.ABC):
         dom.cap = cache_cap()    # live env resolution, as cached_get did
         return dom
 
+    def _exec_key(self, *parts) -> Tuple:
+        """Executable cache key: the caller's parts plus the live
+        degradation backend override (:func:`repro.kernels.dispatch.
+        backend_override`) — ``None`` in normal operation, so warm keys
+        are unchanged; a degraded dispatch with XLA forced must compile
+        (and cache) its own executable rather than be handed one traced
+        with the failing backend."""
+        return (*parts, backend_override())
+
     def _compiled_plan(self, plan, batch: bool) -> Callable:
         """Cached jitted ``fn(rng, dyn)`` for this stack's execution model.
         One compile per (stack, plan structure key, batch-ness); every
         dynamic-param setting of the structure reuses it."""
         return get_pool().get(
-            self.exec_domain(), (batch, plan.structure_key()),
+            self.exec_domain(), self._exec_key(batch, plan.structure_key()),
             lambda: self._wrap_parametric(plan.build_parametric(), batch))
 
     def _wrap_parametric(self, pfn: Callable, batch: bool) -> Callable:
@@ -285,7 +332,8 @@ class Stack(abc.ABC):
         bucket of every sweep reuses it — at most one executable per
         bucket signature, zero retraces per candidate."""
         return get_pool().get(
-            self.exec_domain(), (("population", n), plan.structure_key()),
+            self.exec_domain(),
+            self._exec_key(("population", n), plan.structure_key()),
             lambda: self._wrap_population(plan, n))
 
     # -- serving micro-batches (one compiled call per request chunk) ---------
@@ -299,7 +347,8 @@ class Stack(abc.ABC):
         micro-batch of every stream reuses one executable, so steady-state
         serving compiles at most once per (structure, chunk size)."""
         return get_pool().get(
-            self.exec_domain(), (("serve", n), plan.structure_key()),
+            self.exec_domain(),
+            self._exec_key(("serve", n), plan.structure_key()),
             lambda: self._wrap_serve(plan, n))
 
     def _wrap_serve(self, plan, n: int) -> Callable:
@@ -816,7 +865,7 @@ class HadoopStack(Stack):
 
             return jax.jit(counted)
 
-        return get_pool().get(self.exec_domain(), key, build)
+        return get_pool().get(self.exec_domain(), self._exec_key(key), build)
 
     def _run_stages(self, dag: ProxyDAG, rng: jax.Array, vmap: bool
                     ) -> Tuple[Any, float]:

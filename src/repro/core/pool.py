@@ -68,7 +68,8 @@ class PoolDomain:
     #: stack module's CACHE_STATS — kept so existing tests keep reading it)
     mirror: Optional[Dict[str, int]] = None
     stats: Dict[str, int] = dataclasses.field(
-        default_factory=lambda: {"hits": 0, "misses": 0, "evictions": 0})
+        default_factory=lambda: {"hits": 0, "misses": 0, "evictions": 0,
+                                 "invalidations": 0, "failures": 0})
     #: insertion sequence per key (global order for pool-wide FIFO)
     seq: Dict[Any, int] = dataclasses.field(default_factory=dict)
 
@@ -198,6 +199,30 @@ class ExecutablePool:
                 d.cache.clear()
                 d.seq.clear()
 
+    # -- failure health ------------------------------------------------------
+
+    def invalidate(self, dom: PoolDomain, key: Any) -> bool:
+        """Drop one artifact because a dispatch through it failed — the
+        serving engine's invalidate-on-failure hook.  A retried dispatch
+        then rebuilds fresh (the cached executable itself may be the
+        fault: a poisoned trace, a kernel miscompiled under since-changed
+        env knobs).  Returns whether the key was present; counts into
+        ``stats["invalidations"]`` either way a failure was recorded."""
+        with LOCK:
+            present = key in dom.cache
+            if present:
+                dom.cache.pop(key)
+                dom.seq.pop(key, None)
+                dom.stats["invalidations"] += 1
+            return present
+
+    def record_failure(self, dom: PoolDomain) -> None:
+        """Count one failed dispatch against ``dom`` — the health signal
+        ``stats()`` exposes per domain (a domain whose failures grow while
+        its hit rate stays high is serving a poisoned executable)."""
+        with LOCK:
+            dom.stats["failures"] += 1
+
     # -- introspection -------------------------------------------------------
 
     def executables(self) -> int:
@@ -210,7 +235,8 @@ class ExecutablePool:
         the eviction-pressure tests read."""
         with LOCK:
             domains = {}
-            totals = {"hits": 0, "misses": 0, "evictions": 0}
+            totals = {"hits": 0, "misses": 0, "evictions": 0,
+                      "invalidations": 0, "failures": 0}
             for name, d in sorted(self._domains.items()):
                 domains[name] = {"kind": d.kind, "size": len(d.cache),
                                  "cap": d.cap, **d.stats,

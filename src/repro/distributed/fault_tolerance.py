@@ -1,5 +1,4 @@
-"""Fault tolerance: restartable training loop, straggler monitoring, and
-elastic mesh transitions.
+"""Fault tolerance: restartable training loop and elastic mesh transitions.
 
 At 1000+ nodes the failure model is: (a) a worker dies mid-step -> the job
 restarts from the latest atomic checkpoint with deterministic data skipping;
@@ -10,62 +9,33 @@ per-leaf device_put with the new shardings (see train/checkpoint.py).
 
 On this CPU container the mechanisms are exercised with injected failures
 (tests/test_fault_tolerance.py); the policies are the production ones.
+
+.. deprecated::
+   The fault *primitives* — :class:`InjectedFailure`,
+   :class:`StragglerMonitor`, :class:`StragglerReport` — moved to
+   :mod:`repro.faults`, which owns deterministic fault injection for both
+   the training and the serving paths (seeded :class:`repro.faults.FaultPlan`
+   chaos schedules).  They are re-exported here for backward compatibility;
+   import them from ``repro.faults`` in new code.  Only the training loop
+   (:class:`ResilientTrainLoop`) still lives in this module.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import statistics
 import time
-from typing import Any, Callable, Dict, Iterator, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
-import numpy as np
 
+# Deprecation shims: the canonical home of these primitives is repro.faults
+# (importing through here keeps existing call sites working unchanged).
+from ..faults import InjectedFailure, StragglerMonitor, StragglerReport
 from ..train.checkpoint import (AsyncCheckpointer, latest_step,
                                 restore_checkpoint)
 
-
-class InjectedFailure(RuntimeError):
-    """Stands in for a dead host / preempted slice in tests."""
-
-
-@dataclasses.dataclass
-class StragglerReport:
-    step: int
-    step_time: float
-    median: float
-    action: str
-
-
-class StragglerMonitor:
-    """Flags steps slower than ``threshold`` x running median.
-
-    Mitigation hook: on TPU pods the actionable responses are (1) re-dispatch
-    the straggler's microbatches to its DP peers for this step (collective-
-    free: grad contribution re-weighted), or (2) mark the host for
-    replacement at the next checkpoint boundary.  Here the hook records the
-    decision; the re-dispatch itself needs a real multi-host runtime.
-    """
-
-    def __init__(self, threshold: float = 2.0, window: int = 32):
-        self.threshold = threshold
-        self.window = window
-        self.times: List[float] = []
-        self.reports: List[StragglerReport] = []
-
-    def observe(self, step: int, step_time: float) -> Optional[StragglerReport]:
-        self.times.append(step_time)
-        self.times = self.times[-self.window:]
-        if len(self.times) < 5:
-            return None
-        med = statistics.median(self.times)
-        if step_time > self.threshold * med:
-            rep = StragglerReport(step, step_time, med,
-                                  "re-dispatch microbatches to DP peers")
-            self.reports.append(rep)
-            return rep
-        return None
+__all__ = ["InjectedFailure", "StragglerMonitor", "StragglerReport",
+           "LoopResult", "ResilientTrainLoop"]
 
 
 @dataclasses.dataclass

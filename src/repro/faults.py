@@ -1,0 +1,176 @@
+"""Deterministic fault injection for resilience testing (`repro.faults`).
+
+A benchmark that stands in for a production service must also stand in
+for production *failure*: executors die mid-batch, stragglers hold a
+dispatch hostage, cache pressure evicts hot executables at the worst
+moment.  This module makes those events first-class and — critically —
+**seeded**: a :class:`FaultPlan` precomputes every fault decision from
+``(seed, n)`` up front, so a chaos run is bit-reproducible.  The serving
+engine consults the plan with pure lookups (``fail_attempts``,
+``straggler_delay_s``, ``evicts``) — no RNG is drawn at serve time, which
+is what lets the virtual clock report identical percentiles for the same
+chaos plan on any machine, any number of times.
+
+Fault kinds (all keyed by request index ``rid``):
+
+* **failure** — the executor raises :class:`InjectedFailure` for the
+  first ``fail_attempts(rid)`` dispatch attempts of that request, then
+  succeeds (the transient-fault model).  ``poison`` rids fail on *every*
+  attempt — the request that must be isolated by chunk bisection and
+  terminally failed without taking its batch down.
+* **straggler** — the request's dispatch is delayed by
+  ``straggler_delay_s(rid)`` (a slow host / late shard), charged to its
+  chunk's service time under both clocks.
+* **eviction storm** — before serving ``rid``, every compiled executable
+  of the serving stack is evicted (cache-pressure chaos); the next
+  dispatch re-compiles (wall clock) or pays the modeled cold overhead
+  (virtual clock).
+
+This module also absorbs the fault primitives that previously lived in
+``repro.distributed.fault_tolerance`` (:class:`InjectedFailure`,
+:class:`StragglerMonitor`, :class:`StragglerReport`); that module keeps
+deprecation shims.  No jax imports here: the plan must be constructible
+anywhere without initializing a backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import statistics
+from typing import Dict, FrozenSet, List, Optional, Sequence
+
+import numpy as np
+
+
+class InjectedFailure(RuntimeError):
+    """Stands in for a dead host / preempted slice in tests and chaos
+    runs (moved here from ``repro.distributed.fault_tolerance``)."""
+
+
+def default_fault_rate() -> float:
+    """Process-wide chaos knob (``REPRO_FAULT_RATE`` env var, default 0):
+    the injected executor-failure rate the benchmark serve smoke runs
+    under — CI's ``chaos`` matrix leg sets it non-zero."""
+    raw = os.environ.get("REPRO_FAULT_RATE")
+    if raw is None or raw.strip() == "":
+        return 0.0
+    return max(0.0, float(raw))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, fully-precomputed chaos schedule over ``n`` requests.
+
+    Build one with :meth:`sample` (rates -> deterministic rid sets) or
+    directly from explicit per-rid tables.  Frozen: a plan can be shared
+    across serve runs and threads, and two runs under the same plan see
+    byte-identical fault decisions.
+    """
+
+    seed: int = 0
+    #: rid -> number of leading dispatch attempts that raise
+    failures: Dict[int, int] = dataclasses.field(default_factory=dict)
+    #: rids that fail on *every* attempt (terminal after retry budget)
+    poison: FrozenSet[int] = frozenset()
+    #: rid -> artificial dispatch delay in seconds
+    stragglers: Dict[int, float] = dataclasses.field(default_factory=dict)
+    #: rids whose dispatch is preceded by an executable-eviction storm
+    evictions: FrozenSet[int] = frozenset()
+
+    @classmethod
+    def sample(cls, n: int, seed: int = 0, *,
+               failure_rate: float = 0.0,
+               straggler_rate: float = 0.0,
+               eviction_rate: float = 0.0,
+               fail_attempts: int = 1,
+               straggler_delay_s: float = 0.005,
+               poison: Sequence[int] = ()) -> "FaultPlan":
+        """Draw a deterministic plan: each of the ``n`` rids independently
+        fails / straggles / triggers an eviction storm at the given rates,
+        all from one ``numpy.random.RandomState(seed)`` stream (so the
+        same ``(n, seed, rates)`` always yields the same plan)."""
+        rs = np.random.RandomState(seed)
+        draws = rs.uniform(size=(3, max(n, 1)))
+        delays = rs.uniform(0.5, 1.5, size=max(n, 1)) * straggler_delay_s
+        failures = {i: int(fail_attempts) for i in range(n)
+                    if draws[0, i] < failure_rate}
+        stragglers = {i: float(delays[i]) for i in range(n)
+                      if draws[1, i] < straggler_rate}
+        evictions = frozenset(i for i in range(n)
+                              if draws[2, i] < eviction_rate)
+        return cls(seed=seed, failures=failures,
+                   poison=frozenset(int(p) for p in poison),
+                   stragglers=stragglers, evictions=evictions)
+
+    # -- pure lookups (no state, no RNG) -------------------------------------
+
+    def fail_attempts(self, rid: int) -> int:
+        """Leading attempts of ``rid`` that must raise (poison = all)."""
+        if rid in self.poison:
+            return 1 << 30
+        return self.failures.get(rid, 0)
+
+    def should_fail(self, rid: int, attempt: int) -> bool:
+        """Whether dispatch ``attempt`` (0-based) of ``rid`` raises."""
+        return attempt < self.fail_attempts(rid)
+
+    def straggler_delay_s(self, rid: int) -> float:
+        return self.stragglers.get(rid, 0.0)
+
+    def evicts(self, rid: int) -> bool:
+        return rid in self.evictions
+
+    @property
+    def empty(self) -> bool:
+        return not (self.failures or self.poison or self.stragglers
+                    or self.evictions)
+
+    def summary(self) -> Dict[str, int]:
+        return {"failure_rids": len(self.failures),
+                "poison_rids": len(self.poison),
+                "straggler_rids": len(self.stragglers),
+                "eviction_rids": len(self.evictions)}
+
+
+# ---------------------------------------------------------------------------
+# straggler monitoring (absorbed from distributed.fault_tolerance)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    step_time: float
+    median: float
+    action: str
+
+
+class StragglerMonitor:
+    """Flags steps slower than ``threshold`` x running median.
+
+    Mitigation hook: on TPU pods the actionable responses are (1) re-dispatch
+    the straggler's microbatches to its DP peers for this step (collective-
+    free: grad contribution re-weighted), or (2) mark the host for
+    replacement at the next checkpoint boundary.  Here the hook records the
+    decision; the re-dispatch itself needs a real multi-host runtime.
+    """
+
+    def __init__(self, threshold: float = 2.0, window: int = 32):
+        self.threshold = threshold
+        self.window = window
+        self.times: List[float] = []
+        self.reports: List[StragglerReport] = []
+
+    def observe(self, step: int, step_time: float) -> Optional[StragglerReport]:
+        self.times.append(step_time)
+        self.times = self.times[-self.window:]
+        if len(self.times) < 5:
+            return None
+        med = statistics.median(self.times)
+        if step_time > self.threshold * med:
+            rep = StragglerReport(step, step_time, med,
+                                  "re-dispatch microbatches to DP peers")
+            self.reports.append(rep)
+            return rep
+        return None

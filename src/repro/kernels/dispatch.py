@@ -17,8 +17,10 @@ initialize the JAX backend):
 
 from __future__ import annotations
 
+import contextlib
 import os
-from typing import Optional
+import threading
+from typing import Iterator, Optional
 
 import jax
 
@@ -26,6 +28,37 @@ BACKENDS = ("auto", "pallas", "xla")
 
 #: platforms with a real (non-interpreter) Pallas lowering
 _PALLAS_PLATFORMS = ("tpu", "gpu")
+
+#: graceful-degradation override: when the serving engine's circuit
+#: breaker trips on a structure it re-dispatches with the stock XLA
+#: lowering forced, beating *every* other knob (a component pinning
+#: ``extra["backend"]="pallas"`` is exactly what must be overridden when
+#: that kernel is the suspected fault).  Thread-local so a degraded
+#: serving dispatch cannot leak the override into concurrent tuners.
+_OVERRIDE = threading.local()
+
+
+def backend_override() -> Optional[str]:
+    """The active forced backend, or None.  Part of every compiled-
+    executable cache key (:mod:`repro.api.stack`): a degraded dispatch
+    must never be handed an executable traced with the failing backend."""
+    return getattr(_OVERRIDE, "value", None)
+
+
+@contextlib.contextmanager
+def forced_backend(backend: Optional[str]) -> Iterator[None]:
+    """Force every :func:`resolve_backend` call in this thread to
+    ``backend`` for the duration (``None`` = no-op).  Used by the serving
+    engine's degradation path; restores the previous override on exit."""
+    if backend is not None and backend not in ("pallas", "xla"):
+        raise ValueError(f"forced backend must be 'pallas', 'xla' or "
+                         f"None, got {backend!r}")
+    prev = backend_override()
+    _OVERRIDE.value = backend
+    try:
+        yield
+    finally:
+        _OVERRIDE.value = prev
 
 
 def default_interpret(platform: Optional[str] = None) -> bool:
@@ -44,9 +77,13 @@ def default_interpret(platform: Optional[str] = None) -> bool:
 def resolve_backend(requested: Optional[str] = None) -> str:
     """Resolve a backend request to a concrete ``"pallas"`` or ``"xla"``.
 
-    Precedence: explicit ``requested`` (a component's
-    ``extra["backend"]``) > ``REPRO_BACKEND`` env var > ``"auto"``.
+    Precedence: :func:`forced_backend` degradation override > explicit
+    ``requested`` (a component's ``extra["backend"]``) > ``REPRO_BACKEND``
+    env var > ``"auto"``.
     """
+    forced = backend_override()
+    if forced is not None:
+        return forced
     b = requested or os.environ.get("REPRO_BACKEND") or "auto"
     if b not in BACKENDS:
         raise ValueError(f"unknown backend {b!r}; expected one of {BACKENDS}")

@@ -8,8 +8,8 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS
-from repro.distributed.fault_tolerance import (InjectedFailure,
-                                               ResilientTrainLoop)
+from repro.distributed.fault_tolerance import ResilientTrainLoop
+from repro.faults import InjectedFailure
 from repro.models import Model
 from repro.train import AdamWConfig, TrainOptions, init_state, make_train_step
 from repro.train.checkpoint import (AsyncCheckpointer, available_steps,

@@ -1,0 +1,298 @@
+"""Fault-tolerance contract of the serving engine: seeded chaos plans are
+bit-reproducible, retried chunks return bit-identical outputs, no request
+is ever lost under injected failures, the circuit breaker trips and
+recovers, live ``submit()`` is thread-safe at zero steady-state retraces,
+and the partial-chunk timeout flush lowers P99 on sparse traces."""
+
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api.stack import CACHE_STATS, classify_failure
+from repro.faults import FaultPlan, InjectedFailure, default_fault_rate
+from repro.serve.engine import (ServingEngine, burst_trace, poisson_trace,
+                                serve)
+
+MIX = ("terasort", "kmeans")
+
+
+def _deterministic(report):
+    """ServeReport JSON minus the host RSS samples (the one field that is
+    legitimately machine-state dependent even under the virtual clock)."""
+    d = report.to_json()
+    d.pop("resources")
+    return d
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return poisson_trace(n=12, rate_rps=200.0, seed=5, mix=MIX)
+
+
+@pytest.fixture(scope="module")
+def engine(trace):
+    eng = ServingEngine(stack="openmp", max_batch=4, bucket_size=2)
+    eng.warmup(trace)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan primitives
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_is_seeded_and_pure():
+    a = FaultPlan.sample(64, seed=9, failure_rate=0.25, straggler_rate=0.25,
+                         eviction_rate=0.1, poison=(3,))
+    b = FaultPlan.sample(64, seed=9, failure_rate=0.25, straggler_rate=0.25,
+                         eviction_rate=0.1, poison=(3,))
+    assert a == b
+    assert a.summary() == b.summary()
+    assert not a.empty and FaultPlan().empty
+    # pure lookups: failures clear after fail_attempts, poison never does
+    rid = next(iter(a.failures))
+    assert a.should_fail(rid, 0) and not a.should_fail(rid, 1)
+    assert a.should_fail(3, 0) and a.should_fail(3, 10_000)
+    assert a.straggler_delay_s(next(iter(a.stragglers))) > 0.0
+    c = FaultPlan.sample(64, seed=10, failure_rate=0.25)
+    assert c.failures != a.failures
+
+
+def test_fault_rate_env_knob(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULT_RATE", raising=False)
+    assert default_fault_rate() == 0.0
+    monkeypatch.setenv("REPRO_FAULT_RATE", "")
+    assert default_fault_rate() == 0.0
+    monkeypatch.setenv("REPRO_FAULT_RATE", "0.25")
+    assert default_fault_rate() == 0.25
+
+
+def test_failure_classification():
+    assert classify_failure(InjectedFailure("boom")) == "injected"
+    assert classify_failure(MemoryError()) == "resource"
+    assert classify_failure(RuntimeError("RESOURCE_EXHAUSTED: oom")) \
+        == "resource"
+    assert classify_failure(ValueError("bad shape")) == "fatal"
+    assert classify_failure(RuntimeError("transport glitch")) == "transient"
+
+
+def test_fault_primitives_moved_but_shimmed():
+    from repro.distributed import fault_tolerance as shim
+    from repro import faults
+    assert shim.InjectedFailure is faults.InjectedFailure
+    assert shim.StragglerMonitor is faults.StragglerMonitor
+    assert shim.StragglerReport is faults.StragglerReport
+
+
+# ---------------------------------------------------------------------------
+# deterministic chaos (virtual clock)
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_run_is_bit_reproducible_under_virtual_clock(engine, trace):
+    plan = FaultPlan.sample(len(trace), seed=7, failure_rate=0.3,
+                            straggler_rate=0.3, eviction_rate=0.15)
+    a = engine.serve(trace, clock="virtual", faults=plan)
+    b = engine.serve(trace, clock="virtual", faults=plan)
+    assert _deterministic(a) == _deterministic(b)
+    assert a.failures > 0 and a.retries > 0
+    assert a.fault_plan == plan.summary()
+    # the eviction storm is modeled: at least one re-warmed executable
+    assert a.cold_dispatches > 0
+    # a different seed yields a different chaos run
+    other = FaultPlan.sample(len(trace), seed=8, failure_rate=0.3,
+                             straggler_rate=0.3, eviction_rate=0.15)
+    assert _deterministic(engine.serve(trace, clock="virtual",
+                                       faults=other)) != _deterministic(a)
+
+
+def test_stragglers_are_charged_to_latency(engine, trace):
+    base = engine.serve(trace, clock="virtual")
+    slow = engine.serve(
+        trace, clock="virtual",
+        faults=FaultPlan(stragglers={r.rid: 0.5 for r in trace}))
+    assert slow.latency_s["p99"] > base.latency_s["p99"]
+    assert _deterministic(slow) == _deterministic(engine.serve(
+        trace, clock="virtual",
+        faults=FaultPlan(stragglers={r.rid: 0.5 for r in trace})))
+
+
+# ---------------------------------------------------------------------------
+# zero loss + bit-identical retries (wall clock, real execution)
+# ---------------------------------------------------------------------------
+
+
+def test_no_request_lost_and_retries_bit_identical(engine, trace):
+    clean = engine.serve(trace, clock="wall")
+    assert clean.lost_requests == 0 and clean.failures == 0
+    # >= 10% injected executor failures plus stragglers (the acceptance
+    # bar): every request still completes, and every retried chunk's
+    # output is bit-identical to the fault-free run
+    plan = FaultPlan.sample(len(trace), seed=13, failure_rate=0.35,
+                            straggler_rate=0.25)
+    assert len(plan.failures) >= max(2, len(trace) // 10)
+    chaos = engine.serve(trace, clock="wall", faults=plan)
+    assert chaos.lost_requests == 0
+    assert chaos.failures >= len(plan.failures)
+    assert chaos.retries > 0
+    assert chaos.status_counts().get("retried", 0) > 0
+    assert all(s in ("ok", "retried") for s in chaos.statuses)
+    for r_clean, r_chaos in zip(clean.results, chaos.results):
+        np.testing.assert_array_equal(np.asarray(r_clean),
+                                      np.asarray(r_chaos))
+
+
+def test_poison_request_is_isolated_not_batch_fatal(trace):
+    # rid 2 fails on every attempt; with the breaker disabled (huge
+    # threshold) it must be bisected out of its chunk, terminally failed,
+    # and every *other* request still served bit-identically
+    eng = ServingEngine(stack="openmp", max_batch=4, bucket_size=2,
+                        breaker_threshold=1000)
+    eng.warmup(trace)
+    clean = eng.serve(trace, clock="wall")
+    plan = FaultPlan(poison=frozenset({2}))
+    rep = eng.serve(trace, clock="wall", faults=plan)
+    assert rep.lost_requests == 0
+    assert rep.statuses[2] == "failed"
+    assert rep.results[2] is None
+    for rid in range(len(trace)):
+        if rid == 2:
+            continue
+        assert rep.statuses[rid] in ("ok", "retried")
+        np.testing.assert_array_equal(np.asarray(clean.results[rid]),
+                                      np.asarray(rep.results[rid]))
+
+
+def test_eviction_storm_recovers_with_recompile(trace):
+    eng = ServingEngine(stack="openmp", max_batch=4, bucket_size=2)
+    eng.warmup(trace)
+    plan = FaultPlan(evictions=frozenset({trace.requests[4].rid}))
+    rep = eng.serve(trace, clock="wall", faults=plan)
+    # the storm evicted live executables: recovery recompiles (cold
+    # dispatches) but never drops a request
+    assert rep.lost_requests == 0
+    assert rep.cold_dispatches > 0
+    assert all(s in ("ok", "retried") for s in rep.statuses)
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+
+def test_circuit_breaker_trips_degrades_and_recovers():
+    tr = poisson_trace(n=10, rate_rps=500.0, seed=3, mix=("terasort",))
+    eng = ServingEngine(stack="openmp", max_batch=1,
+                        breaker_threshold=2, breaker_recovery=2,
+                        max_retries=2)
+    eng.warmup(tr)
+    # rid 0 is poison on the normal path; after 2 consecutive failures the
+    # breaker opens and the lane degrades to the forced-XLA singleton
+    # path, which rescues rid 0 and subsequent requests until 2 degraded
+    # successes close the breaker again
+    rep = eng.serve(tr, clock="wall", faults=FaultPlan(poison=frozenset({0})))
+    assert rep.breaker_trips == 1
+    assert rep.degraded_dispatches == 2
+    assert rep.lost_requests == 0
+    counts = rep.status_counts()
+    assert counts.get("degraded", 0) == 2
+    assert counts.get("failed", 0) == 0
+
+
+def test_deadline_misses_are_accounted_per_slo():
+    tr = burst_trace(n=6, bursts=1, seed=0, mix=("terasort",),
+                     deadline_s=1e-9, slo="interactive")
+    eng = ServingEngine(stack="openmp", max_batch=2, bucket_size=2)
+    rep = eng.serve(tr, clock="virtual")
+    assert rep.deadline_misses > 0
+    assert rep.deadline_miss_by_slo.get("interactive") == rep.deadline_misses
+    relaxed = burst_trace(n=6, bursts=1, seed=0, mix=("terasort",),
+                          deadline_s=1e9, slo="batch")
+    assert eng.serve(relaxed, clock="virtual").deadline_misses == 0
+
+
+# ---------------------------------------------------------------------------
+# partial-chunk timeout flush
+# ---------------------------------------------------------------------------
+
+
+def test_timeout_flush_lowers_p99_on_sparse_trace():
+    # arrivals ~40 s apart, service a few seconds: holding for a full
+    # chunk of 8 makes early requests wait for late arrivals; a finite
+    # flush bound releases short padded chunks instead
+    sparse = poisson_trace(n=12, rate_rps=0.025, seed=2, mix=("terasort",))
+    hold = serve(sparse, stack="openmp", clock="virtual", warmup=False,
+                 max_batch=8, bucket_size=8, batch_wait_s=math.inf)
+    flush = serve(sparse, stack="openmp", clock="virtual", warmup=False,
+                  max_batch=8, bucket_size=8, batch_wait_s=0.05)
+    assert flush.timeout_flushes > 0
+    assert flush.latency_s["p99"] < hold.latency_s["p99"]
+    # flushing must not lose or duplicate anything
+    assert flush.lost_requests == 0
+    assert sum(k * v for k, v in flush.batch_hist.items()) == len(sparse)
+    # eager dispatch (the default) reports no timeout flushes
+    eager = serve(sparse, stack="openmp", clock="virtual", warmup=False,
+                  max_batch=8, bucket_size=8)
+    assert eager.timeout_flushes == 0
+
+
+# ---------------------------------------------------------------------------
+# live submission
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_submit_zero_steady_state_retraces(engine, trace):
+    eng = engine
+    eng.warmup(trace)            # idempotent; ensures both chunk sizes
+    eng.start()
+    try:
+        futs = {}
+        flock = threading.Lock()
+        traces0 = CACHE_STATS["traces"]
+
+        def feed(shard):
+            for r in shard:
+                f = eng.submit(r)
+                with flock:
+                    futs[r.rid] = f
+
+        threads = [threading.Thread(target=feed,
+                                    args=(trace.requests[i::8],))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert eng.drain(timeout=60.0)
+    finally:
+        rep = eng.shutdown()
+    assert CACHE_STATS["traces"] == traces0
+    assert rep.mode == "live"
+    assert rep.n_requests == len(trace)
+    assert rep.lost_requests == 0
+    assert rep.retraces == 0
+    assert len(futs) == len(trace)
+    for f in futs.values():
+        assert np.asarray(f.result()).size > 0
+
+
+def test_live_submit_requires_start_and_stamps_rids(trace):
+    eng = ServingEngine(stack="openmp", max_batch=2, bucket_size=2)
+    with pytest.raises(RuntimeError):
+        eng.submit(trace.requests[0])
+    eng.warmup(trace)
+    eng.start()
+    try:
+        f0 = eng.submit(trace.requests[3], deadline_s=10.0)
+        f1 = eng.submit(trace.requests[3])
+        assert f0.result(timeout=60.0) is not None
+        assert f1.result(timeout=60.0) is not None
+    finally:
+        rep = eng.shutdown()
+    # re-stamped rids: two submissions of the same request are distinct
+    assert rep.n_requests == 2
+    assert rep.lost_requests == 0
+    with pytest.raises(RuntimeError):
+        eng.submit(trace.requests[0])   # engine is shut down again
