@@ -32,6 +32,14 @@ Two further gates ride on top:
   CI's ``chaos`` leg): hard gates ``lost_requests == 0`` and
   ``steady_state_retraces == 0`` under injection, plus the seeded
   virtual-clock chaos run must be bit-reproducible.
+* **ai_structure_sweep** — the structural tuner must reach an
+  lm_train-style target (``ai_fidelity_harness``) by *inserting* an
+  attention/recurrent dwarf component, again with zero engine traces
+  and zero new body compiles warm.
+* **lm_proxy** — the LM-fleet proxy bench must produce non-zero
+  accuracy rows for every active dry-run cell (a missing cell is
+  regenerated at reduced scale; an unregenerable one raises), with
+  ``mean_accuracy`` baseline-gated like the speedups.
 """
 
 from __future__ import annotations
@@ -54,11 +62,12 @@ from repro.core.dag import (Edge, ProxyDAG, _accumulate, _gather_inputs,
 from repro.core.dwarfs import ComponentParams, get_component
 from repro.core.dwarfs.base import fit_buffer
 from repro.core.proxy import ProxyBenchmark
-from repro.core.structsearch import (StructuralTuner,
+from repro.core.structsearch import (StructuralTuner, ai_fidelity_harness,
                                      structural_fidelity_harness)
 from repro.core.workloads import PROXY_SPECS
 
 from .common import ROOT, csv_row
+from .lm_proxy import lm_proxy_summary
 from .serve_bench import bench_serve_faults, bench_serve_sweep
 
 BENCH_JSON = ROOT / "BENCH_engine.json"
@@ -465,6 +474,65 @@ def bench_structure_sweep() -> Dict[str, float]:
     }
 
 
+def bench_ai_structure_sweep() -> Dict[str, object]:
+    """The AI-dwarf structural contract (``ai_fidelity_harness``, shared
+    with ``tests/test_ai_dwarfs.py``): an lm_train-style reference whose
+    attention stage the detuned seed lacks entirely.  No re-weighting of
+    the seed's GEMM edges can create the missing ``mix_attention`` channel
+    (exp-gated contractions — see :class:`repro.core.metrics.CostReport`),
+    so the tuner must *insert* an attention-class component; and it must do
+    so entirely through the compositional engine — zero executable traces
+    and zero new body compiles once the pool is profiled."""
+    reference, detuned, pool = ai_fidelity_harness()
+    size = reference.sources["tokens"]
+    chunk = reference.edges[0].params.chunk_size
+
+    warmup = ProxyDAG(
+        "ai_struct_warmup", {"tokens": size},
+        [Edge(c, ["tokens"] if i == 0 else [f"w{i - 1}"], f"w{i}",
+              ComponentParams(data_size=size, chunk_size=chunk))
+         for i, c in enumerate(pool)], f"w{len(pool) - 1}")
+    engine.measure(warmup)
+    target = engine.measure(reference)
+    from repro.core.autotune import _deviations
+    seed_dev = max((abs(d) for d in _deviations(
+        target, engine.measure(detuned),
+        [k for k in target if abs(target[k]) > 1e-12]).values()),
+        default=float("inf"))
+
+    e0 = engine.stats()
+    t = time.perf_counter()
+    res = StructuralTuner(target, tol=0.10, max_candidates=STRUCT_BUDGET,
+                          generations=4, components=pool,
+                          seed=0).tune(ProxyBenchmark(detuned))
+    wall = time.perf_counter() - t
+    e1 = engine.stats()
+
+    from repro.core.dwarfs import REGISTRY
+    ai_names = {n for n, c in REGISTRY.items()
+                if c.dwarf in ("attention", "gemm", "recurrent")}
+    # components only a structural insertion can contribute: the seed
+    # already carries gemm_train edges, so the gate keys on the
+    # attention/recurrent classes (the exp-gated ones)
+    attn_names = {n for n, c in REGISTRY.items()
+                  if c.dwarf in ("attention", "recurrent")}
+    used = {e.component for e in res.proxy.dag.edges}
+    return {
+        "budget": STRUCT_BUDGET,
+        "deviation": res.final_deviation,
+        "seed_deviation": seed_dev,
+        "converged": float(res.converged),
+        "structures_scored": res.structures_scored,
+        "weight_candidates": res.weight_candidates,
+        "ai_components_used": sorted(used & ai_names),
+        "attention_class_used": sorted(used & attn_names),
+        "best_lineage": res.best_lineage,
+        "wall_s": wall,
+        "engine_traces": e1["traces"] - e0["traces"],
+        "new_body_compiles": res.new_body_compiles,
+    }
+
+
 def _resolved_backend() -> str:
     """The kernel backend this run measures under — part of the baseline
     identity: interpret-mode Pallas shifts absolute per-candidate costs,
@@ -562,6 +630,31 @@ def _serve_baseline_regressions(serve: Dict[str, object],
     return failures
 
 
+def _lm_baseline_regressions(lm: Dict[str, object],
+                             baseline: Dict) -> List[str]:
+    """>REGRESSION_FRAC drop of lm_proxy ``mean_accuracy`` vs the committed
+    baseline.  Like the other baseline gates this only compares
+    like-for-like: same kernel backend and the same cell set — including
+    each cell's reduced-ness, since a reduced (CPU-smoke) cell and a full
+    512-chip cell are different targets.  The hard per-cell ``acc > 0``
+    floor applies everywhere regardless."""
+    base_backend = baseline.get("kernel_backend", "xla")
+    if baseline and base_backend != _resolved_backend():
+        return []
+    base_lm = baseline.get("lm_proxy", {})
+    ident = [(c["name"], bool(c.get("reduced"))) for c in lm["cells"]]
+    base_ident = [(c["name"], bool(c.get("reduced")))
+                  for c in base_lm.get("cells", [])]
+    if not base_ident or ident != base_ident:
+        return []
+    base, new = base_lm.get("mean_accuracy"), lm.get("mean_accuracy")
+    if base and base > 0 and new is not None and \
+            new < base * (1.0 - REGRESSION_FRAC):
+        return [f"lm_proxy.mean_accuracy={new:.3f} regressed "
+                f">{REGRESSION_FRAC:.0%} vs committed baseline {base:.3f}"]
+    return []
+
+
 class BenchGateError(RuntimeError):
     """A perf-contract regression the harness must not let rot silently."""
 
@@ -574,8 +667,12 @@ def bench_compile_vs_run() -> List[str]:
     population = bench_population_sweep()
     plan_sweep = bench_plan_sweep()
     structure = bench_structure_sweep()
+    ai_structure = bench_ai_structure_sweep()
     serve = bench_serve_sweep()
     serve_faults = bench_serve_faults()
+    # raises LmProxyError on a missing/unparseable dry-run cell — a dead
+    # bench is a harness failure, not a quiet 0.0 csv row
+    lm = lm_proxy_summary()
     failures = []
     if serve["steady_state_retraces"] > 0:
         failures.append(
@@ -624,6 +721,32 @@ def bench_compile_vs_run() -> List[str]:
             f"structure_new_body_compiles="
             f"{structure['structure_new_body_compiles']:.0f} (mutated "
             f"plans recompiled already-profiled components)")
+    if ai_structure["deviation"] >= ai_structure["seed_deviation"]:
+        failures.append(
+            f"ai_structure.deviation={ai_structure['deviation']:.3f} >= "
+            f"seed {ai_structure['seed_deviation']:.3f} (structure search "
+            f"did not improve on the attention-free seed)")
+    if not ai_structure["attention_class_used"]:
+        failures.append(
+            "ai_structure.attention_class_used is empty (the structural "
+            "tuner reached an lm_train-style target without inserting any "
+            "attention/recurrent dwarf component)")
+    if ai_structure["engine_traces"] > 0:
+        failures.append(
+            f"ai_structure.engine_traces="
+            f"{ai_structure['engine_traces']:.0f} (AI structure scoring "
+            f"executed the proxy)")
+    if ai_structure["new_body_compiles"] > 0:
+        failures.append(
+            f"ai_structure.new_body_compiles="
+            f"{ai_structure['new_body_compiles']:.0f} (mutated plans "
+            f"recompiled already-profiled AI components)")
+    for c in lm["cells"]:
+        if c["acc"] <= 0:
+            failures.append(
+                f"lm_proxy cell {c['name']} accuracy == 0 "
+                f"(dead bench row)")
+    failures += _lm_baseline_regressions(lm, baseline)
     payload = {
         "jax_version": jax.__version__,
         "platform": jax.default_backend(),
@@ -635,15 +758,17 @@ def bench_compile_vs_run() -> List[str]:
         "population_sweep": population,
         "plan_sweep": plan_sweep,
         "structure_sweep": structure,
+        "ai_structure_sweep": ai_structure,
         "serve_sweep": serve,
         "serve_faults": serve_faults,
+        "lm_proxy": lm,
         "gate_failures": failures,
         "engine_stats": engine.stats(),
         "stack_cache_stats": cache_stats(),
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=1) + "\n")
     rows = _csv_rows(run_path, sweep, tune, population, plan_sweep,
-                     structure, serve, serve_faults)
+                     structure, ai_structure, serve, serve_faults, lm)
     if failures:
         for row in rows:           # the evidence still lands on failure
             print(row, flush=True)
@@ -652,7 +777,8 @@ def bench_compile_vs_run() -> List[str]:
 
 
 def _csv_rows(run_path, sweep, tune, population, plan_sweep,
-              structure, serve, serve_faults) -> List[str]:
+              structure, ai_structure, serve, serve_faults,
+              lm) -> List[str]:
     return [
         csv_row("engine/run_path", run_path["steady_state_s"] * 1e6,
                 f"first_s={run_path['first_call_s']:.3f};"
@@ -689,6 +815,19 @@ def _csv_rows(run_path, sweep, tune, population, plan_sweep,
                 f"engine_traces={structure['structure_engine_traces']:.0f};"
                 f"new_compiles="
                 f"{structure['structure_new_body_compiles']:.0f}"),
+        csv_row("engine/ai_structure", ai_structure["wall_s"] * 1e6,
+                f"deviation={ai_structure['deviation']:.3f};"
+                f"converged={ai_structure['converged']:.0f};"
+                f"ai_used={'+'.join(ai_structure['ai_components_used'])};"
+                f"attention_class="
+                f"{'+'.join(ai_structure['attention_class_used'])};"
+                f"engine_traces={ai_structure['engine_traces']:.0f};"
+                f"new_compiles={ai_structure['new_body_compiles']:.0f}"),
+        csv_row("engine/lm_proxy", lm["mean_accuracy"] * 100,
+                f"cells={lm['n_cells']};"
+                f"mean_acc={lm['mean_accuracy']:.3f};"
+                f"min_acc={lm['min_accuracy']:.3f};"
+                f"reduced={lm['n_reduced']}"),
         csv_row("engine/serve_sweep", serve["latency_p95_s"] * 1e6,
                 f"p50_s={serve['latency_p50_s']:.4f};"
                 f"p95_s={serve['latency_p95_s']:.4f};"

@@ -6,21 +6,35 @@ vector, and report (a) metric accuracy and (b) 'architecture simulation'
 speedup = cell lower+compile+analyze time / proxy lower+compile+analyze time.
 This is the paper's 100x-simulation-cut applied to accelerator-scale
 workloads.
+
+Cells are produced by ``python -m repro.launch.dryrun`` (512-chip fleet
+emulation).  When a cell is missing — fresh checkout, CI — it is regenerated
+on demand at reduced scale (``run_cell(..., reduced=True)``: the family's
+``reduced()`` config on the local devices) instead of silently scoring 0.0.
+A cell that cannot be generated or parsed raises :class:`LmProxyError`;
+benchmarks/run.py and the lm_proxy gate in benchmarks/compile_vs_run.py turn
+that into a non-zero exit, so a dead bench fails loudly.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
+import os
 from pathlib import Path
 from typing import Dict, List
 
-from repro.core import (proxy_from_dwarf_weights, vector_accuracy)
+from repro.core import proxy_from_dwarf_weights, vector_accuracy
 from repro.core.autotune import autotune
 from repro.core.metrics import CostReport, metric_vector
+from repro.core.profiler import decompose_to_dwarfs
 
 from .common import BENCH_DIR, REFRESH, csv_row
 
 DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+#: filename suffix for on-demand reduced cells (never shadows full cells)
+REDUCED_TAG = "__reduced"
 
 #: cells representative of each family (full sweep is expensive on 1 core)
 CELLS = (
@@ -31,61 +45,139 @@ CELLS = (
     ("whisper-large-v3", "train_4k", "16x16"),
 )
 
+_FAST = os.environ.get("REPRO_BENCH_FAST", "") == "1"
+_N_CELLS = os.environ.get("REPRO_BENCH_LM_CELLS", "")
+#: cells actually benchmarked this run (CI fast mode trims the sweep)
+ACTIVE_CELLS = (CELLS[:max(1, int(_N_CELLS))] if _N_CELLS
+                else (CELLS[:2] if _FAST else CELLS))
+_MAX_ITER = 8 if _FAST else 20
+
+
+class LmProxyError(RuntimeError):
+    """A dry-run cell is missing/unusable and could not be regenerated."""
+
+
+#: CostReport dict-valued fields restored explicitly
+_STRUCTURED_KEYS = ("op_mix", "collective_bytes", "collective_count",
+                    "op_bytes")
+#: scalars CostReport.to_json() derives from other fields — not settable
+_DERIVED_KEYS = frozenset({"total_collective_bytes", "arithmetic_intensity"})
+
 
 def _report_from_json(d: Dict) -> CostReport:
+    """Strict CostReport loader for dry-run cells.
+
+    Unknown keys are tolerated only when plainly numeric (an older/newer
+    writer's extra scalar channel — forward-compatible to ignore).  Anything
+    else — a structured field this loader does not restore, a known field
+    holding a non-numeric value — raises instead of being dropped: silent
+    dropping is how ``attention_flops`` on disk quietly became 0.0 in the
+    proxy target and the whole bench rotted unnoticed.
+    """
     rep = CostReport()
     r = d["report"]
-    import dataclasses as _dc
-    fields = {f.name for f in _dc.fields(CostReport)}
+    fields = {f.name for f in dataclasses.fields(CostReport)}
     for k, v in r.items():
-        if k in fields and isinstance(v, (int, float)):
-            setattr(rep, k, float(v))
-    rep.op_mix = {k: float(v) for k, v in r.get("op_mix", {}).items()}
-    rep.collective_bytes = {k: float(v)
-                            for k, v in r.get("collective_bytes", {}).items()}
+        if k in _STRUCTURED_KEYS or k in _DERIVED_KEYS:
+            continue
+        if k == "while_trip_counts":
+            rep.while_trip_counts = [int(x) for x in v]
+            continue
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            if k in fields:
+                setattr(rep, k, float(v))
+            continue
+        raise LmProxyError(
+            f"dry-run report key {k!r} has non-numeric value of type "
+            f"{type(v).__name__}; refusing to drop it silently")
+    for k in _STRUCTURED_KEYS:
+        setattr(rep, k, {kk: float(vv) for kk, vv in r.get(k, {}).items()})
     return rep
 
 
-def _dwarf_weights_from_report(rep: CostReport) -> Dict[str, float]:
-    from repro.core.profiler import decompose_to_dwarfs
-    return decompose_to_dwarfs(rep)
+def _load_cell(arch: str, shape: str, mesh: str) -> Dict:
+    from repro.launch.dryrun import cell_path, run_cell
+
+    full = cell_path(arch, shape, mesh)
+    path = full if full.exists() else cell_path(arch, shape, mesh,
+                                                REDUCED_TAG)
+    if not path.exists():
+        rec = run_cell(arch, shape, multi_pod=(mesh == "2x16x16"),
+                       reduced=True)
+        if rec.get("status") != "ok":
+            raise LmProxyError(
+                f"could not regenerate dry-run cell {arch}/{shape}/{mesh}: "
+                f"status={rec.get('status')!r} "
+                f"{rec.get('reason', rec.get('error', ''))}")
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(rec, indent=1))
+    try:
+        rec = json.loads(path.read_text())
+    except ValueError as e:
+        raise LmProxyError(f"unparseable dry-run cell {path.name}: {e}") \
+            from e
+    if rec.get("status") != "ok" or "report" not in rec:
+        raise LmProxyError(
+            f"dry-run cell {path.name} has no usable report "
+            f"(status={rec.get('status')!r})")
+    return rec
+
+
+def _cell_result(arch: str, shape: str, mesh: str) -> Dict:
+    """Tune + evaluate the proxy for one cell (cached under BENCH_DIR)."""
+    rec = _load_cell(arch, shape, mesh)
+    reduced = bool(rec.get("reduced"))
+    tag = REDUCED_TAG if reduced else ""
+    BENCH_DIR.mkdir(parents=True, exist_ok=True)
+    cache = BENCH_DIR / f"lmproxy_{arch}_{shape}_{mesh}{tag}.json"
+    if cache.exists() and not REFRESH:
+        d = json.loads(cache.read_text())
+        if "acc" in d and "derived" in d:
+            return d
+    rep = _report_from_json(rec)
+    target = metric_vector(rep)
+    full_sim_s = rec["lower_s"] + rec["compile_s"]
+    weights = decompose_to_dwarfs(rep)
+    proxy = proxy_from_dwarf_weights(
+        f"proxy_{arch}_{shape}", weights, base_size=1 << 16, chunk=512)
+    res = autotune(proxy, target, tol=0.15, max_iter=_MAX_ITER)
+    pp = res.proxy.profile(execute=True, exec_iters=1)
+    acc = vector_accuracy(
+        target, pp.metrics,
+        keys=[k for k in target
+              if k.startswith(("mix_", "arithmetic", "vpu_share"))
+              and (target[k] > 1e-9 or pp.metrics.get(k, 0) > 1e-9)])
+    sim_speedup = full_sim_s / max(pp.simulation_s, 1e-9)
+    derived = (f"acc={acc['avg']:.3f};sim_speedup={sim_speedup:.0f}x;"
+               f"full_compile_s={full_sim_s:.1f};"
+               f"proxy_compile_s={pp.simulation_s:.2f};"
+               f"proxy_exec_ms={pp.exec_s*1e3:.1f}"
+               + (";reduced" if reduced else ""))
+    d = {"name": f"{arch}_{shape}", "acc": acc["avg"],
+         "sim_speedup": sim_speedup, "reduced": reduced,
+         "attention_weight": weights.get("attention", 0.0),
+         "derived": derived, "dag": res.proxy.dag.to_json()}
+    cache.write_text(json.dumps(d))
+    return d
+
+
+def lm_proxy_summary() -> Dict:
+    """Machine-readable sweep over ACTIVE_CELLS (BENCH_engine.json + gate).
+
+    Raises :class:`LmProxyError` on any missing/unparseable cell — callers
+    (benchmarks/run.py, the compile_vs_run gate) exit non-zero on that.
+    """
+    cells = [_cell_result(*c) for c in ACTIVE_CELLS]
+    accs = [c["acc"] for c in cells]
+    return {
+        "cells": cells,
+        "n_cells": len(cells),
+        "mean_accuracy": sum(accs) / max(len(accs), 1),
+        "min_accuracy": min(accs) if accs else 0.0,
+        "n_reduced": sum(1 for c in cells if c["reduced"]),
+    }
 
 
 def bench_lm_proxy() -> List[str]:
-    rows = []
-    for arch, shape, mesh in CELLS:
-        cell = DRYRUN_DIR / f"{arch}__{shape}__{mesh}.json"
-        if not cell.exists():
-            rows.append(csv_row(f"lmproxy/{arch}_{shape}", 0.0,
-                                "missing dry-run cell"))
-            continue
-        cache = BENCH_DIR / f"lmproxy_{arch}_{shape}_{mesh}.json"
-        if cache.exists() and not REFRESH:
-            d = json.loads(cache.read_text())
-            rows.append(csv_row(f"lmproxy/{arch}_{shape}",
-                                d["acc"] * 100, d["derived"]))
-            continue
-        d = json.loads(cell.read_text())
-        rep = _report_from_json(d)
-        target = metric_vector(rep)
-        full_sim_s = d["lower_s"] + d["compile_s"]
-        weights = _dwarf_weights_from_report(rep)
-        proxy = proxy_from_dwarf_weights(
-            f"proxy_{arch}_{shape}", weights, base_size=1 << 16, chunk=512)
-        res = autotune(proxy, target, tol=0.15, max_iter=20)
-        pp = res.proxy.profile(execute=True, exec_iters=1)
-        acc = vector_accuracy(
-            target, pp.metrics,
-            keys=[k for k in target
-                  if k.startswith(("mix_", "arithmetic", "vpu_share"))
-                  and (target[k] > 1e-9 or pp.metrics.get(k, 0) > 1e-9)])
-        sim_speedup = full_sim_s / max(pp.simulation_s, 1e-9)
-        derived = (f"acc={acc['avg']:.3f};sim_speedup={sim_speedup:.0f}x;"
-                   f"full_compile_s={full_sim_s:.1f};"
-                   f"proxy_compile_s={pp.simulation_s:.2f};"
-                   f"proxy_exec_ms={pp.exec_s*1e3:.1f}")
-        cache.write_text(json.dumps({"acc": acc["avg"], "derived": derived,
-                                     "dag": res.proxy.dag.to_json()}))
-        rows.append(csv_row(f"lmproxy/{arch}_{shape}", acc["avg"] * 100,
-                            derived))
-    return rows
+    return [csv_row(f"lmproxy/{d['name']}", d["acc"] * 100, d["derived"])
+            for d in (_cell_result(*c) for c in ACTIVE_CELLS)]

@@ -37,7 +37,10 @@ from repro.api.stack import OpenMPStack
 from repro.faults import FaultPlan, default_fault_rate
 from repro.serve.engine import ServingEngine, burst_trace, poisson_trace
 
-SERVE_MIX = ("terasort", "kmeans")
+#: mixed working set: two big-data proxies plus the lm_decode AI proxy —
+#: the steady-state zero-retrace gate must hold across the heterogeneous
+#: (attention/scan/top-k) request stream, not just the paper's Table-3 set
+SERVE_MIX = ("terasort", "kmeans", "lm_decode")
 N_REQUESTS = int(os.environ.get("REPRO_BENCH_SERVE_REQUESTS", "24"))
 RATE_RPS = float(os.environ.get("REPRO_BENCH_SERVE_RATE", "200"))
 MAX_BATCH = int(os.environ.get("REPRO_BENCH_SERVE_MAX_BATCH", "8"))

@@ -40,6 +40,14 @@ FIELD_BOUNDS: Dict[str, Tuple[float, float]] = {
     "mix_rounds": (1.0, 16.0),
     "hops": (1.0, 64.0),
     "levels": (1.0, 16.0),
+    # AI-dwarf shape extras (static leaves: moving them recompiles).  The
+    # generic EXTRA_BOUNDS ceiling (4M) would let a tuner draw a 4M-token
+    # attention window (S^2 cost) or a 4M-wide SSM state — bound them to
+    # the ranges core/dwarfs/ai.py sanitizes to.
+    "seq_len": (8.0, 1024.0),
+    "heads": (1.0, 16.0),
+    "kv_heads": (1.0, 16.0),
+    "state": (2.0, 64.0),
 }
 
 #: fallback bounds for numeric ``extra`` entries (centers, vertices, bins, ...)
@@ -48,7 +56,8 @@ EXTRA_BOUNDS: Tuple[float, float] = (1.0, float(1 << 22))
 #: fields that must stay integral after a tuner step
 INT_FIELDS = {"data_size", "chunk_size", "parallelism", "weight", "stride",
               "centers", "vertices", "bins", "groups", "buckets", "hops",
-              "rounds", "levels", "k"}
+              "rounds", "levels", "k", "seq_len", "heads", "kv_heads",
+              "state"}
 
 
 def bounds_for(field: str) -> Tuple[float, float]:

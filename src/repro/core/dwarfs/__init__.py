@@ -1,16 +1,19 @@
-"""The eight big data dwarfs (paper §2.2) as JAX dwarf components.
+"""The eight big data dwarfs (paper §2.2) as JAX dwarf components, plus the
+AI extension dwarfs (Data-Dwarfs follow-up, arxiv 1802.00699).
 
 Importing this package populates the component registry with all dwarf
 components (paper Fig. 3): matrix, sampling, logic, transform, set, graph,
-sort, basic statistic.
+sort, basic statistic — and the AI classes attention / gemm / recurrent
+(:mod:`repro.core.dwarfs.ai`).
 """
 
 from .base import (REGISTRY, ComponentParams, DwarfComponent,
                    components_of_dwarf, fit_buffer, get_component)
 from . import matrix, sampling, logic, transform, set_ops, graph, sort, statistic  # noqa: F401
+from . import ai  # noqa: F401
 
 DWARFS = ("matrix", "sampling", "logic", "transform", "set", "graph", "sort",
-          "statistic")
+          "statistic", "attention", "gemm", "recurrent")
 
 __all__ = [
     "REGISTRY", "ComponentParams", "DwarfComponent", "components_of_dwarf",

@@ -1,0 +1,206 @@
+"""AI dwarf components (Data-Dwarfs extension, arxiv 1802.00699).
+
+The follow-up paper extends the eight big-data dwarfs to AI workloads; these
+components make the repo's AI raw material — the Pallas ``flash_attention``
+and ``matmul`` kernels and the ``models/ssm.py`` selective scan — reachable
+from the dwarf DAG:
+
+  * ``attention``       — flash-attention forward, GQA-aware
+  * ``gemm_train``      — matmul forward + backward (``jax.vjp``)
+  * ``scan_recurrent``  — chunked SSM associative scan + output projection
+
+Each is ``pallas_capable`` and dispatches through
+:func:`repro.kernels.dispatch.resolve_backend` exactly like ``topk`` /
+``hash_mix``: the backend is resolved *outside* the jitted wrapper so
+``REPRO_BACKEND`` / the circuit breaker's ``forced_backend`` key the
+executable caches.  Unlike the integer kernels, the blocked float kernels
+accumulate in a different order than stock XLA, so each declares a
+``parity_tol`` instead of bit-identity.
+
+Shape extras (``seq_len`` / ``heads`` / ``kv_heads`` / ``state``) are
+*static* tunables — they change traced shapes, so the tuner pays a
+recompile to move them (bounded in ``repro.api.params.FIELD_BOUNDS``);
+``rounds`` on the training/recurrent components is a loop count and stays
+dynamic where the kernel does not consume it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels.dispatch import default_interpret
+from .base import (ComponentParams, DwarfComponent, as_chunks, fit_buffer,
+                   loop_count, register)
+
+
+def _int_extra(extra: Dict[str, Any], key: str, default: int,
+               lo: int, hi: int) -> int:
+    """Static shape extra -> bounded int (tuners write floats)."""
+    v = extra.get(key, default)
+    if not isinstance(v, (int, float)) or isinstance(v, bool):
+        v = default
+    return int(max(lo, min(int(round(float(v))), hi)))
+
+
+@register
+class Attention(DwarfComponent):
+    """Causal softmax attention over the buffer viewed as (1, S, H, hd).
+
+    GQA-aware: ``kv_heads`` < ``heads`` shares each KV head across a query
+    group (``kv_heads`` is snapped down to a divisor of ``heads``).  Q comes
+    from the buffer, K from its reversal and V from a rotation, so the three
+    projections are distinct views of the same data stream.
+    """
+
+    name = "attention"
+    dwarf = "attention"
+    pallas_capable = True
+    parity_tol = 1e-3      # online softmax vs. full softmax accumulation
+
+    def _geometry(self, p: ComponentParams):
+        H = _int_extra(p.extra, "heads", 4, 1, 16)
+        kv = _int_extra(p.extra, "kv_heads", H, 1, H)
+        while H % kv:
+            kv -= 1
+        hd = max(8, min(128, (p.chunk_size // 8) * 8))
+        s_default = max(8, p.data_size // (H * hd))
+        S = _int_extra(p.extra, "seq_len", s_default, 8, 1024)
+        return S, H, kv, hd
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams,
+              rng: jax.Array) -> jnp.ndarray:
+        x = x.astype(jnp.float32)      # backend-independent f32 numerics
+        S, H, kv, hd = self._geometry(p)
+        q = fit_buffer(x, S * H * hd).reshape(1, S, H, hd)
+        k = fit_buffer(x[::-1], S * kv * hd).reshape(1, S, kv, hd)
+        v = fit_buffer(jnp.roll(x, x.shape[0] // 3), S * kv * hd
+                       ).reshape(1, S, kv, hd)
+        if self.uses_pallas(p):
+            from ...kernels.flash_attention.ops import flash_attention
+            # resolve interpret here, not inside the jitted wrapper: as an
+            # explicit static arg it keys the jit cache (same contract as
+            # mix_u32 / topk)
+            out = flash_attention(q, k, v, causal=True, block_q=64,
+                                  block_kv=64, interpret=default_interpret(),
+                                  backend="pallas")
+        else:
+            from ...kernels.flash_attention.ref import attention_ref
+            out = attention_ref(q.transpose(0, 2, 1, 3),
+                                k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3),
+                                causal=True).transpose(0, 2, 1, 3)
+        return out.reshape(-1)
+
+
+@register
+class GemmTrain(DwarfComponent):
+    """Matmul forward + backward — the training-step GEMM triple.
+
+    ``rounds`` SGD-style steps over A (k x k weights B built from the
+    buffer): forward ``C = A @ B``, cotangent ``G = C / k``, backward
+    ``dA = G @ B^T`` via :func:`jax.vjp` on the XLA path or explicit tiled
+    matmul kernel calls on the Pallas path, then a per-row RMS
+    renormalization (the layer-norm analog that keeps round counts stable).
+    The final step also produces ``dB = A^T @ G`` — all three GEMMs of a
+    dense layer's train step.
+    """
+
+    name = "gemm_train"
+    dwarf = "gemm"
+    dynamic_extras = ("rounds",)
+    pallas_static = ("rounds",)
+    pallas_capable = True
+    parity_tol = 1e-3      # tiled f32 scratch vs. XLA accumulation order
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams,
+              rng: jax.Array) -> jnp.ndarray:
+        x = x.astype(jnp.float32)      # backend-independent f32 numerics
+        a = as_chunks(x, p)                                   # (m, k)
+        k = a.shape[1]
+        bmat = fit_buffer(x[::-1], k * k).reshape(k, k) * (1.0 / k)
+        inv_k = 1.0 / k
+        rounds = loop_count(p.extra.get("rounds", 1), default=1)
+
+        def _renorm(u):
+            return u * jax.lax.rsqrt(
+                jnp.mean(u * u, axis=1, keepdims=True) + 1e-6)
+
+        if self.uses_pallas(p) and isinstance(rounds, int):
+            from ...kernels.matmul.ops import matmul
+            interp = default_interpret()
+            mm = lambda u, w: matmul(u, w, block_m=64, block_n=64,
+                                     block_k=64, interpret=interp,
+                                     backend="pallas")
+            acc = a
+            for _ in range(rounds):
+                c = mm(acc, bmat)
+                da = mm(c * inv_k, bmat.T)
+                acc = _renorm(acc - 0.1 * da)
+            c = mm(acc, bmat)
+            g = c * inv_k
+            da = mm(g, bmat.T)
+            db = mm(acc.T, g)
+        else:
+            def step(acc):
+                c, vjp = jax.vjp(lambda u: u @ bmat, acc)
+                (da,) = vjp(c * inv_k)
+                return _renorm(acc - 0.1 * da)
+
+            acc = jax.lax.fori_loop(0, rounds, lambda i, u: step(u), a)
+            c, vjp = jax.vjp(lambda u, w: u @ w, acc, bmat)
+            da, db = vjp(c * inv_k)
+        return jnp.concatenate([(c + da).reshape(-1),
+                                db.reshape(-1)]) * inv_k
+
+
+@register
+class ScanRecurrent(DwarfComponent):
+    """Selective-scan recurrence (``models/ssm.py`` chunk) + readout GEMM.
+
+    The buffer becomes one SSM chunk — inputs ``u`` (L, di=chunk), gates
+    ``dt`` and input/output maps ``Bc``/``Cc`` from shifted views, a fixed
+    stable decay ``A`` — advanced ``rounds`` times by the associative scan,
+    then read out through a (di, di) projection: the projection is the
+    Pallas-dispatched hot spot, the scan itself is shared VPU work on both
+    backends.  ``rounds`` stays dynamic even on Pallas (the kernel does not
+    consume it).
+    """
+
+    name = "scan_recurrent"
+    dwarf = "recurrent"
+    dynamic_extras = ("rounds",)
+    pallas_capable = True
+    parity_tol = 1e-3      # readout matmul kernel vs. XLA dot
+
+    def apply(self, x: jnp.ndarray, p: ComponentParams,
+              rng: jax.Array) -> jnp.ndarray:
+        from ...models.ssm import _ssm_chunk
+        x = x.astype(jnp.float32)      # scan mixes with the f32 A matrix
+        u2 = as_chunks(x, p)                                  # (L, di)
+        L, di = u2.shape
+        st = _int_extra(p.extra, "state", 8, 2, 64)
+        u = u2[None]                                          # (1, L, di)
+        dt = 0.01 + 0.1 * jax.nn.sigmoid(u)
+        Bc = fit_buffer(x[::-1], L * st).reshape(1, L, st) * (st ** -0.5)
+        Cc = fit_buffer(jnp.roll(x, 7), L * st).reshape(1, L, st) \
+            * (st ** -0.5)
+        A = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32) / st, (di, 1))
+        h0 = jnp.zeros((1, di, st), jnp.float32)
+        rounds = loop_count(p.extra.get("rounds", 1), default=1)
+        pre = max(rounds - 1, 0) if isinstance(rounds, int) \
+            else jnp.maximum(rounds - 1, 0)
+        h = jax.lax.fori_loop(
+            0, pre, lambda i, c: _ssm_chunk(c, (dt, Bc, Cc, u), A)[0], h0)
+        _, y = _ssm_chunk(h, (dt, Bc, Cc, u), A)
+        w = fit_buffer(x, di * di).reshape(di, di) * (1.0 / di)
+        y2 = y.reshape(L, di)
+        if self.uses_pallas(p):
+            from ...kernels.matmul.ops import matmul
+            out = matmul(y2, w, block_m=64, block_n=64, block_k=64,
+                         interpret=default_interpret(), backend="pallas")
+        else:
+            out = jnp.dot(y2, w, preferred_element_type=jnp.float32)
+        return out.reshape(-1)

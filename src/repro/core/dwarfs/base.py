@@ -138,6 +138,12 @@ class DwarfComponent:
     pallas_static: Tuple[str, ...] = ()
     #: whether a Pallas fast path exists for this component's hot spot
     pallas_capable: bool = False
+    #: backend-parity tolerance.  ``None`` means the Pallas and XLA paths are
+    #: bit-identical (integer kernels like ``topk``/``hash_mix``); a float is
+    #: the allclose rtol/atol for kernels whose blocked accumulation order
+    #: legitimately differs from the stock XLA lowering (flash attention's
+    #: online softmax, the tiled matmul's f32 scratch accumulation).
+    parity_tol: Optional[float] = None
 
     def uses_pallas(self, p: ComponentParams) -> bool:
         return self.pallas_capable and resolve_backend(

@@ -213,7 +213,8 @@ def measure_plan(plan, host_bytes: float = 0.0) -> Dict[str, float]:
 #: flattened so population reports assemble as numpy linear algebra
 _BASIS_FIELDS = ("flops", "vpu_ops", "bytes_accessed", "rng_elems",
                  "sort_elems", "fft_elems", "gather_elems", "reduce_elems",
-                 "logic_elems", "compare_elems", "elementwise_elems")
+                 "logic_elems", "compare_elems", "elementwise_elems",
+                 "attention_flops")
 
 
 def _report_to_vec(rep: CostReport) -> np.ndarray:

@@ -319,6 +319,10 @@ class CostReport:
     compare_elems: float = 0.0
     elementwise_elems: float = 0.0
     dot_bytes: float = 0.0
+    #: subset of ``flops`` spent in exp-gated contractions — dots whose HLO
+    #: neighborhood contains a softmax ``exponential`` (attention score/value
+    #: products, selective-scan recurrences).  Always <= ``flops``.
+    attention_flops: float = 0.0
 
     @property
     def total_collective_bytes(self) -> float:
@@ -343,7 +347,7 @@ class CostReport:
         self.while_trip_counts.extend(other.while_trip_counts)
         for f in ("rng_elems", "sort_elems", "fft_elems", "gather_elems",
                   "reduce_elems", "logic_elems", "compare_elems",
-                  "elementwise_elems", "dot_bytes"):
+                  "elementwise_elems", "dot_bytes", "attention_flops"):
             setattr(self, f, getattr(self, f) + getattr(other, f) * mult)
 
     def to_json(self) -> Dict:
@@ -484,6 +488,85 @@ class HloCostAnalyzer:
                     contract *= dims[di]
         return 2.0 * out_elems * contract
 
+    #: softmax signature opcodes that mark a dot as attention-class
+    _EXP_OPS = frozenset({"exponential", "exponential-minus-one"})
+    #: traversal barriers: an exp on the far side of one of these is a
+    #: different computational phase (FFT filters, another contraction, ...)
+    _ATTN_BARRIERS = frozenset({"dot", "fft", "sort", "convolution"})
+
+    def _comp_has_exp(self, name: str) -> bool:
+        """Whether computation ``name`` (or a nested fusion body) contains a
+        softmax exponential.  Memoized per computation."""
+        memo = getattr(self, "_exp_memo", None)
+        if memo is None:
+            memo = self._exp_memo = {}
+        if name in memo:
+            return memo[name]
+        memo[name] = False            # cycle guard
+        comp = self.computations.get(name)
+        found = False
+        if comp is not None:
+            for instr in comp.instructions:
+                if instr.opcode in self._EXP_OPS:
+                    found = True
+                    break
+                if instr.opcode == "fusion":
+                    m = _CALLS_RE.search(instr.attrs)
+                    if m and self._comp_has_exp(m.group(1)):
+                        found = True
+                        break
+        memo[name] = found
+        return found
+
+    def _users(self, comp: HloComputation) -> Dict[str, List[HloInstruction]]:
+        """operand name -> consuming instructions, built once per computation."""
+        memo = getattr(self, "_users_memo", None)
+        if memo is None:
+            memo = self._users_memo = {}
+        if comp.name not in memo:
+            users: Dict[str, List[HloInstruction]] = {}
+            for instr in comp.instructions:
+                for o in instr.operands:
+                    users.setdefault(o, []).append(instr)
+            memo[comp.name] = users
+        return memo[comp.name]
+
+    def _dot_is_attention(self, comp: HloComputation, instr: HloInstruction,
+                          depth: int = 4) -> bool:
+        """True when a softmax ``exponential`` sits in the dot's local HLO
+        neighborhood (producers *and* consumers, looking one level into
+        fusion bodies): the QK^T score product feeds the softmax, the PV
+        product consumes it.  Traversal stops at ``_ATTN_BARRIERS`` so e.g.
+        SIFT's exp-shaped FFT filters do not taint its projection GEMM.
+        """
+        users = self._users(comp)
+        seen = {instr.name}
+        frontier = [instr]
+        for _ in range(depth):
+            nxt: List[HloInstruction] = []
+            for cur in frontier:
+                neighbors = [comp.by_name.get(o) for o in cur.operands]
+                neighbors += users.get(cur.name, [])
+                for n in neighbors:
+                    if n is None or n.name in seen:
+                        continue
+                    seen.add(n.name)
+                    if n.opcode in self._EXP_OPS:
+                        return True
+                    if n.opcode == "fusion":
+                        m = _CALLS_RE.search(n.attrs)
+                        if m and self._comp_has_exp(m.group(1)):
+                            return True
+                        nxt.append(n)
+                        continue
+                    if n is not instr and n.opcode in self._ATTN_BARRIERS:
+                        continue
+                    nxt.append(n)
+            frontier = nxt
+            if not frontier:
+                break
+        return False
+
     def _conv_flops(self, comp: HloComputation, instr: HloInstruction) -> float:
         out_elems = instr.out_elems
         m = re.search(r"window=\{size=([\dx]+)", instr.attrs)
@@ -599,6 +682,8 @@ class HloCostAnalyzer:
                 f = self._dot_flops(comp, instr)
                 report.flops += f
                 report.dot_bytes += io_bytes
+                if self._dot_is_attention(comp, instr):
+                    report.attention_flops += f
             elif op.startswith("convolution"):
                 report.flops += self._conv_flops(comp, instr)
             elif op == "fft":
@@ -651,9 +736,9 @@ def analyze_hlo_text(text: str, vmem_bytes: float = 0.0) -> CostReport:
 
 METRIC_KEYS = (
     "flops", "vpu_ops", "bytes_accessed", "arithmetic_intensity",
-    "mix_dot", "mix_elementwise", "mix_reduce", "mix_gather_scatter",
-    "mix_sort", "mix_fft", "mix_rng", "mix_logic", "mix_compare_select",
-    "collective_bytes", "host_bytes",
+    "mix_dot", "mix_attention", "mix_elementwise", "mix_reduce",
+    "mix_gather_scatter", "mix_sort", "mix_fft", "mix_rng", "mix_logic",
+    "mix_compare_select", "collective_bytes", "host_bytes",
 )
 
 
@@ -665,7 +750,8 @@ def elem_channels(report: CostReport) -> Dict[str, float]:
     HLO op count (a 1-element add and a 4M-element dot are not one each).
     """
     return {
-        "dot": report.flops / 2.0,
+        "dot": max(report.flops - report.attention_flops, 0.0) / 2.0,
+        "attention": report.attention_flops / 2.0,
         "elementwise": report.elementwise_elems,
         "reduce": report.reduce_elems,
         "gather_scatter": report.gather_elems,
@@ -716,9 +802,9 @@ def metric_vector(report: CostReport, host_bytes: float = 0.0,
 #: size-independent keys used for proxy-accuracy reporting (Fig. 5 analog)
 REPORT_METRICS = (
     "arithmetic_intensity", "vpu_share",
-    "mix_dot", "mix_elementwise", "mix_reduce", "mix_gather_scatter",
-    "mix_sort", "mix_fft", "mix_rng", "mix_logic", "mix_compare_select",
-    "mips", "flop_rate", "mem_bw",
+    "mix_dot", "mix_attention", "mix_elementwise", "mix_reduce",
+    "mix_gather_scatter", "mix_sort", "mix_fft", "mix_rng", "mix_logic",
+    "mix_compare_select", "mips", "flop_rate", "mem_bw",
 )
 
 

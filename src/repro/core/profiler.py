@@ -148,14 +148,26 @@ def characterize(fn: Callable, args: Sequence[Any], *,
 
 #: share of each HLO cost channel attributed to each dwarf
 def decompose_to_dwarfs(report: CostReport) -> Dict[str, float]:
-    """Map a workload's HLO cost channels to the eight dwarfs (§2.2).
+    """Map a workload's HLO cost channels to the dwarfs: the paper's eight
+    (§2.2) plus the Data-Dwarfs AI classes (arxiv 1802.00699).
 
     Returns normalized weights — the 'initial weights proportional to
     execution ratios' of the paper's parameter-initialization stage.
+    ``attention_flops`` (exp-gated contractions, see
+    :class:`~repro.core.metrics.HloCostAnalyzer`) feed the ``attention``
+    dwarf; when a workload shows *any* attention mass its remaining dot
+    flops are classed as ``gemm`` (dense-layer train/inference GEMMs)
+    rather than the big-data ``matrix`` dwarf — a pure big-data report
+    (no attention signal) keeps the original eight-dwarf decomposition,
+    so TeraSort/Kmeans/PageRank/SIFT attributions are unchanged.
     """
+    attn = max(min(report.attention_flops, report.flops), 0.0)
+    plain = max(report.flops - attn, 0.0) / 2.0
     # Cost channels in comparable units (approx. element-ops)
     channels = {
-        "matrix": report.flops / 2.0,                     # MAC -> elem-ops
+        "matrix": plain if attn <= 0 else 0.0,            # MAC -> elem-ops
+        "gemm": plain if attn > 0 else 0.0,
+        "attention": attn / 2.0,
         "transform": report.fft_elems * 10.0,
         "sort": report.sort_elems * 10.0,
         "sampling": report.rng_elems * 4.0,
@@ -166,5 +178,5 @@ def decompose_to_dwarfs(report: CostReport) -> Dict[str, float]:
     }
     total = sum(channels.values())
     if total <= 0:
-        return {k: 1.0 / 8.0 for k in channels}
+        return {k: 1.0 / len(channels) for k in channels}
     return {k: v / total for k, v in channels.items()}

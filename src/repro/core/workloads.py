@@ -328,6 +328,67 @@ def sift_proxy() -> ProxyBenchmark:
 
 
 # ---------------------------------------------------------------------------
+# AI proxies (Data-Dwarfs extension) — LM training and decode-serving as
+# dwarf DAGs over the AI components (core/dwarfs/ai.py).  These have no
+# "original" Hadoop-style step function; their reference targets are the
+# full-model dry-run cells benchmarks/lm_proxy.py profiles.
+# ---------------------------------------------------------------------------
+
+LM_TRAIN_PROXY_SPEC: Dict[str, Any] = {
+    "spec_version": SPEC_VERSION,
+    "name": "proxy_lm_train",
+    "description": "Proxy LM training step (AI dwarfs: gemm fwd+bwd, "
+                   "GQA attention, loss statistics)",
+    "stack": "mpi",               # training is SPMD: explicit data parallel
+    "scale": None,
+    "sources": {"tokens": 1 << 15},
+    "edges": [
+        # in/out projections: dense-layer GEMM triple, 2 optimizer rounds
+        _edge("gemm_train", ["tokens"], "h0", weight=2, rounds=2),
+        # GQA flash attention over the residual stream
+        _edge("attention", ["h0"], "attn", weight=2, seq_len=128, heads=4,
+              kv_heads=2),
+        # MLP block dominates train-step flops
+        _edge("gemm_train", ["attn"], "mlp", weight=4, rounds=2),
+        # loss reduction / metrics
+        _edge("count_average", ["mlp"], "out"),
+    ],
+    "sink": "out",
+}
+
+
+def lm_train_proxy() -> ProxyBenchmark:
+    return ProxySpec.from_json(LM_TRAIN_PROXY_SPEC).to_benchmark()
+
+
+LM_DECODE_PROXY_SPEC: Dict[str, Any] = {
+    "spec_version": SPEC_VERSION,
+    "name": "proxy_lm_decode",
+    "description": "Proxy LM decode step (AI dwarfs: MQA-style attention, "
+                   "recurrent scan, top-k sampling)",
+    "stack": "openmp",            # latency path: single-process jit
+    "scale": None,
+    "sources": {"tokens": 1 << 14},
+    "edges": [
+        # KV-cache-heavy attention: many query heads per KV head
+        _edge("attention", ["tokens"], "attn", weight=2, data_size=1 << 14,
+              chunk_size=128, seq_len=256, heads=8, kv_heads=2),
+        # hybrid-decode recurrence (SSM scan + readout projection)
+        _edge("scan_recurrent", ["attn"], "ssm", data_size=1 << 14,
+              chunk_size=128, state=8, rounds=1),
+        # sampling the next token: top-k over logits
+        _edge("top_k", ["ssm"], "out", data_size=1 << 14, chunk_size=128,
+              k=16),
+    ],
+    "sink": "out",
+}
+
+
+def lm_decode_proxy() -> ProxyBenchmark:
+    return ProxySpec.from_json(LM_DECODE_PROXY_SPEC).to_benchmark()
+
+
+# ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
 
@@ -342,6 +403,8 @@ PROXY_SPECS: Dict[str, Dict[str, Any]] = {
     "kmeans": KMEANS_PROXY_SPEC,
     "pagerank": PAGERANK_PROXY_SPEC,
     "sift": SIFT_PROXY_SPEC,
+    "lm_train": LM_TRAIN_PROXY_SPEC,
+    "lm_decode": LM_DECODE_PROXY_SPEC,
 }
 
 def seed_structures(names: Optional[Sequence[str]] = None) -> List["ProxyDAG"]:

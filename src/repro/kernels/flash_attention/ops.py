@@ -1,4 +1,11 @@
-"""jit'd public wrapper: layout handling, padding, GQA, interpret toggle."""
+"""Public wrapper: backend dispatch, layout handling, padding, GQA.
+
+Dispatch goes through :mod:`repro.kernels.dispatch` — the resolved backend
+and interpret flag are decided *here*, per call, outside jit, so the
+``forced_backend`` circuit-breaker override and ``REPRO_BACKEND`` pick the
+execution path and the resolved values key the inner jit caches (a degrade
+to XLA can never be handed a stale Pallas compilation).
+"""
 
 from __future__ import annotations
 
@@ -8,23 +15,21 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..dispatch import default_interpret
+from ..dispatch import default_interpret, resolve_backend
 from .kernel import flash_attention_kernel
+from .ref import attention_ref
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
                                              "interpret"))
-def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-                    causal: bool = True, block_q: int = 128,
-                    block_kv: int = 128, interpret: Optional[bool] = None
-                    ) -> jnp.ndarray:
+def _flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                            causal: bool, block_q: int, block_kv: int,
+                            interpret: bool) -> jnp.ndarray:
     """(B, S, H, hd)-layout attention via the Pallas TPU kernel.
 
     Pads Sq/Skv to the block grid; padding is masked inside the kernel via
     ``kv_len`` and discarded on return.
     """
-    if interpret is None:
-        interpret = default_interpret()
     B, Sq, H, hd = q.shape
     Skv, Kv = k.shape[1], k.shape[2]
     qt = q.transpose(0, 2, 1, 3)
@@ -43,3 +48,29 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                                  block_q=bq, block_kv=bkv,
                                  interpret=interpret)
     return out[:, :, :Sq].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def _attention_xla(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                   causal: bool) -> jnp.ndarray:
+    out = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=causal)
+    return out.transpose(0, 2, 1, 3)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret: Optional[bool] = None,
+                    backend: Optional[str] = None) -> jnp.ndarray:
+    """(B, S, H, hd)-layout attention, backend-dispatched.
+
+    ``resolve_backend(backend)`` picks the Pallas kernel or the stock XLA
+    lowering (``attention_ref``); pass ``backend="pallas"`` to request the
+    kernel explicitly (the ``forced_backend`` degrade still wins).
+    """
+    if resolve_backend(backend) != "pallas":
+        return _attention_xla(q, k, v, causal=causal)
+    if interpret is None:
+        interpret = default_interpret()
+    return _flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                   block_kv=block_kv, interpret=interpret)

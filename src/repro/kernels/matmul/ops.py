@@ -1,21 +1,24 @@
-"""jit'd wrapper with shape padding for the tiled matmul kernel."""
+"""Public wrapper with shape padding for the tiled matmul kernel.
+
+Backend-dispatched through :mod:`repro.kernels.dispatch`: the resolved
+backend / interpret flag are decided per call outside jit, so
+``REPRO_BACKEND=xla`` and the circuit breaker's ``forced_backend`` degrade
+actually turn the kernel off, and the resolved values key the jit cache.
+"""
 import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..dispatch import default_interpret
+from ..dispatch import default_interpret, resolve_backend
 from .kernel import matmul_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "interpret"))
-def matmul(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int = 128,
-           block_n: int = 128, block_k: int = 128,
-           interpret: Optional[bool] = None) -> jnp.ndarray:
-    if interpret is None:
-        interpret = default_interpret()
+def _matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int,
+                   block_n: int, block_k: int, interpret: bool) -> jnp.ndarray:
     M, K = a.shape
     _, N = b.shape
     bm, bn, bk = (min(block_m, M), min(block_n, N), min(block_k, K))
@@ -25,3 +28,21 @@ def matmul(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int = 128,
     out = matmul_kernel(ap, bp, block_m=bm, block_n=bn, block_k=bk,
                         interpret=interpret)
     return out[:M, :N]
+
+
+@jax.jit
+def _matmul_xla(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    # f32 accumulation like the kernel's scratch; out dtype matches the kernel
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int = 128,
+           block_n: int = 128, block_k: int = 128,
+           interpret: Optional[bool] = None,
+           backend: Optional[str] = None) -> jnp.ndarray:
+    if resolve_backend(backend) != "pallas":
+        return _matmul_xla(a, b)
+    if interpret is None:
+        interpret = default_interpret()
+    return _matmul_pallas(a, b, block_m=block_m, block_n=block_n,
+                          block_k=block_k, interpret=interpret)

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell: jit with production shardings -> .lower() -> .compile() ->
@@ -12,6 +9,19 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
       --mesh both [--force] [--fsdp/--no-fsdp]
 """
+
+import os
+import sys
+
+# The production dry-run emulates a 512-chip fleet with host devices, which
+# only works if the flag lands before jax initializes.  Gate it to the CLI
+# entry point: benchmarks/lm_proxy.py imports this module in-process (to
+# regenerate missing cells at reduced scale), and hijacking the caller's
+# device count there — or mutating the env after jax is already up — would
+# silently change every subsequent jit in the host process.
+if __name__ == "__main__" and "jax" not in sys.modules:
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
 import dataclasses
@@ -33,7 +43,7 @@ from ..serve.serve_step import make_decode_step, make_prefill_step
 from ..train.optimizer import AdamWConfig
 from ..train.train_step import TrainOptions, TrainState, init_state, make_train_step
 from .analytic import model_flops
-from .mesh import make_production_mesh
+from .mesh import make_host_mesh, make_production_mesh
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
@@ -45,15 +55,24 @@ def _sds_tree(tree):
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              fsdp: bool = True, opts: Optional[TrainOptions] = None,
              remat: bool = True, accum: int = 4,
-             vmem_fused: float = 0.0, remat_policy: str = "none") -> dict:
+             vmem_fused: float = 0.0, remat_policy: str = "none",
+             reduced: bool = False) -> dict:
     cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if reduced:
+        # CPU-smoke variant (benchmarks/lm_proxy.py regenerates missing
+        # cells with this): same record schema and step construction, but
+        # the family's ``reduced()`` config, a tiny shape, and whatever
+        # devices exist instead of the 512-chip fleet emulation.
+        cfg = cfg.reduced()
+        shape = dataclasses.replace(shape, seq_len=64, global_batch=2)
+        accum = 1
     if cfg.remat != remat or cfg.remat_policy != remat_policy:
         cfg = dataclasses.replace(cfg, remat=remat, remat_policy=remat_policy)
-    shape = SHAPES[shape_name]
     ok, why = cell_is_supported(cfg, shape)
     mesh_name = "2x16x16" if multi_pod else "16x16"
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
-           "kind": shape.kind, "fsdp": fsdp,
+           "kind": shape.kind, "fsdp": fsdp, "reduced": reduced,
            "params_total": cfg.param_count(),
            "params_active": cfg.active_param_count()}
     if not ok:
@@ -61,14 +80,18 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["reason"] = why
         return rec
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if reduced:
+        mesh = make_host_mesh(1, 1)
+        tp = dp_total = 1
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        tp = 16
+        dp_total = 32 if multi_pod else 16
     chips = mesh.size
     if opts is None:
         opts = TrainOptions(accum=accum,
                             batch_axes=(("pod", "data") if multi_pod
                                         else ("data",)))
-    tp = 16
-    dp_total = 32 if multi_pod else 16
     cfg = dataclasses.replace(
         cfg, mesh_batch_axes=opts.batch_axes,
         attn_seq_shard=("model" if cfg.n_heads % tp != 0 else None),
@@ -88,7 +111,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             lambda: init_state(model, jax.random.PRNGKey(0)))
         opt_sh = {"mu": pshard, "nu": pshard, "master": pshard}
         state_sh = TrainState(params=pshard, opt=opt_sh,
-                              step=jax.NamedSharding(mesh, jax.P()))
+                              step=jax.NamedSharding(
+                                  mesh, jax.sharding.PartitionSpec()))
         step_fn = make_train_step(model, AdamWConfig(), opts)
         jfn = jax.jit(step_fn, in_shardings=(state_sh, in_sh),
                       donate_argnums=(0,))
@@ -104,7 +128,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         cache_sds = cache_specs(cfg, shape)
         cache_sh = named(cache_specs_tree(cfg, cache_sds, mesh), mesh)
         fn = make_decode_step(model)
-        rep = jax.NamedSharding(mesh, jax.P())
+        rep = jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
         jfn = jax.jit(fn, in_shardings=(pshard, cache_sh,
                                         in_sh["tokens"], rep),
                       donate_argnums=(1,))

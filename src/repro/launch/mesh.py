@@ -12,12 +12,16 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kw(n: int) -> dict:
+    # AxisType only exists on newer jax; older versions default to Auto.
+    at = getattr(jax.sharding, "AxisType", None)
+    return {"axis_types": (at.Auto,) * n} if at is not None else {}
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kw(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
@@ -26,5 +30,4 @@ def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     if data * model > n:
         data, model = n, 1
     return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        (data, model), ("data", "model"), **_axis_type_kw(2))

@@ -1,0 +1,186 @@
+"""AI dwarf components (core/dwarfs/ai.py) and everything wired to them:
+the lm_train / lm_decode proxy specs, the decompose attribution fix, the
+heterogeneous serving zero-retrace contract, the forced-XLA degrade path,
+and the ``ai_fidelity_harness`` structural-insertion acceptance run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.autotune import _deviations
+from repro.core.dwarfs import ComponentParams, get_component
+from repro.core.dwarfs.base import REGISTRY
+from repro.core.metrics import CostReport
+from repro.core.profiler import decompose_to_dwarfs
+from repro.core.proxy import proxy_from_dwarf_weights
+from repro.core.structsearch import ai_fidelity_harness
+from repro.core.workloads import PROXY_SPECS
+
+AI_COMPONENTS = ("attention", "gemm_train", "scan_recurrent")
+
+
+# ---------------------------------------------------------------------------
+# component basics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", AI_COMPONENTS)
+def test_ai_component_registered_and_runs(name, rng):
+    comp = get_component(name)
+    assert comp.pallas_capable
+    assert comp.parity_tol is not None          # float kernels: tolerance,
+    assert comp.dwarf in ("attention", "gemm", "recurrent")
+    x = jax.random.normal(rng, (2048,), jnp.float32)
+    p = ComponentParams(data_size=2048, chunk_size=128)
+    out = comp(x, p, rng)
+    assert out.ndim == 1 and out.size > 0
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+
+
+@pytest.mark.parametrize("heads,kv_heads", [(4, 4), (8, 2), (6, 4), (4, 1)])
+def test_attention_gqa_head_snap(heads, kv_heads, rng):
+    """kv_heads snaps down to a divisor of heads — every GQA/MQA request
+    yields a valid grouping instead of a reshape error."""
+    comp = get_component("attention")
+    S, H, kv, hd = comp._geometry(ComponentParams(
+        data_size=4096, chunk_size=128,
+        extra={"heads": heads, "kv_heads": kv_heads}))
+    assert H == heads and H % kv == 0 and kv <= kv_heads
+    x = jax.random.normal(rng, (4096,), jnp.float32)
+    out = comp(x, ComponentParams(data_size=4096, chunk_size=128,
+                                  extra={"heads": heads,
+                                         "kv_heads": kv_heads}), rng)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_forced_xla_degrade_disables_pallas_components():
+    """The circuit breaker's ``forced_backend("xla")`` must beat even a
+    per-edge ``extra["backend"]="pallas"`` pin on every AI component."""
+    from repro.kernels.dispatch import forced_backend
+    p = ComponentParams(data_size=1024, chunk_size=64,
+                        extra={"backend": "pallas"})
+    for name in AI_COMPONENTS:
+        comp = get_component(name)
+        assert comp.uses_pallas(p), name
+        with forced_backend("xla"):
+            assert not comp.uses_pallas(p), name
+
+
+# ---------------------------------------------------------------------------
+# dwarf attribution (the lm_proxy misattribution fix)
+# ---------------------------------------------------------------------------
+
+
+def test_decompose_attention_not_misattributed_as_matrix():
+    """An attention-dominated report decomposes into attention + gemm mass
+    — not the big-data ``matrix`` dwarf — and round-trips through
+    ``proxy_from_dwarf_weights`` to a DAG that actually carries an
+    attention-class edge.  This is the path that silently produced
+    pure-matmul proxies for every LM cell before the fix."""
+    rep = CostReport(flops=1e9, attention_flops=4e8, bytes_accessed=1e8,
+                    reduce_elems=1e5)
+    w = decompose_to_dwarfs(rep)
+    assert w["attention"] > 0.1
+    assert w["gemm"] > 0.1
+    assert w["matrix"] == 0.0                   # not the big-data class
+    pb = proxy_from_dwarf_weights("lm_cell", w, base_size=1 << 12, chunk=128)
+    dwarfs_used = {REGISTRY[e.component].dwarf for e in pb.dag.edges}
+    assert "attention" in dwarfs_used
+    assert "gemm" in dwarfs_used
+
+
+def test_decompose_big_data_reports_unchanged():
+    """No attention signal -> the original eight-dwarf attribution (the
+    TeraSort/Kmeans decompositions must not move)."""
+    rep = CostReport(flops=1e9, sort_elems=1e6, rng_elems=1e5)
+    w = decompose_to_dwarfs(rep)
+    assert w["matrix"] > 0.0
+    assert w["attention"] == 0.0 and w["gemm"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# lm_train / lm_decode proxy specs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["lm_train", "lm_decode"])
+def test_lm_proxy_spec_validates_lowers_and_runs(name):
+    from repro.api import ProxySpec, get_stack
+    spec = ProxySpec.from_json(PROXY_SPECS[name])
+    assert spec.name == f"proxy_{name}"
+    pb = spec.to_benchmark()
+    comps = {e.component for e in pb.dag.edges}
+    assert comps & set(AI_COMPONENTS), comps
+    report = get_stack(spec.stack).run(spec)
+    assert report.wall_s > 0
+    assert np.isfinite(np.asarray(report.result, np.float32)).all()
+
+
+def test_lm_specs_in_searchable_registry():
+    """The AI proxies ride every registry-driven sweep (plan sweep,
+    serving templates) — sorted(PROXY_SPECS) must include them."""
+    assert {"lm_train", "lm_decode"} <= set(PROXY_SPECS)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous serving: big-data + lm_decode, zero steady-state retraces
+# ---------------------------------------------------------------------------
+
+
+def test_serve_mixed_lm_trace_zero_retraces():
+    from repro.serve.engine import ServingEngine, poisson_trace
+    trace = poisson_trace(n=8, rate_rps=200.0, seed=3,
+                          mix=("terasort", "lm_decode"))
+    eng = ServingEngine(stack="openmp", max_batch=4, bucket_size=2)
+    eng.warmup(trace)
+    retraces = 0
+    for _ in range(2):
+        rep = eng.serve(trace, clock="wall", mode="open")
+        assert rep.n_requests == 8 and rep.lost_requests == 0
+        retraces += rep.retraces
+    assert retraces == 0
+
+
+# ---------------------------------------------------------------------------
+# structural acceptance: tune_structure must *insert* an attention-class
+# component (mirrors the ai_structure_sweep CI gate, same harness)
+# ---------------------------------------------------------------------------
+
+
+def test_tune_structure_inserts_attention_class_component():
+    from repro.api import tune_structure
+
+    from repro.core.dag import Edge, ProxyDAG
+
+    reference, detuned, pool = ai_fidelity_harness()
+    size = reference.sources["tokens"]
+    chunk = reference.edges[0].params.chunk_size
+    # profile every pool component once so the search itself is purely
+    # compositional (same warmup the ai_structure_sweep CI gate does)
+    warmup = ProxyDAG(
+        "ai_struct_warmup", {"tokens": size},
+        [Edge(c, ["tokens"] if i == 0 else [f"w{i - 1}"], f"w{i}",
+              ComponentParams(data_size=size, chunk_size=chunk))
+         for i, c in enumerate(pool)], f"w{len(pool) - 1}")
+    engine.measure(warmup)
+    target = engine.measure(reference)
+    seed_dev = max(abs(d) for d in _deviations(
+        target, engine.measure(detuned),
+        [k for k in target if abs(target[k]) > 1e-12]).values())
+    assert seed_dev > 0.10      # the detuned seed genuinely deviates
+
+    e0 = engine.stats()
+    res = tune_structure(detuned, target, tol=0.10, max_candidates=96,
+                         generations=4, components=pool, seed=0)
+    e1 = engine.stats()
+
+    attn_classes = {n for n, c in REGISTRY.items()
+                    if c.dwarf in ("attention", "recurrent")}
+    used = {e.component for e in res.proxy.dag.edges}
+    assert used & attn_classes, res.best_lineage
+    assert res.final_deviation < seed_dev        # structural improvement
+    # compile-once contract: zero executable traces, zero new body compiles
+    assert e1["traces"] - e0["traces"] == 0
+    assert res.new_body_compiles == 0
