@@ -27,6 +27,14 @@ Two further gates ride on top:
   (``steady_state_retraces == 0``, hard gate) and its micro-batch
   capacity ratio ``batch_speedup_x`` is baseline-gated like the
   population speedups (see :mod:`benchmarks.serve_bench`).
+* **megakernel_sweep** — a mega-eligible fused chain must be
+  bit-identical across the one-kernel Pallas lowering, the
+  ``fori_loop``+``switch`` path, and the unfused plan, with zero
+  retraces across dynamic weight steps; on a leg whose backends resolve
+  pallas with the megakernel armed, at least one dispatch must actually
+  take the one-kernel lowering (``mega_dispatches > 0``).
+  ``stage_speedup_x`` is recorded, not value-gated (CPU CI runs the
+  Pallas interpreter).
 * **serve_faults** — resilient serving under a seeded chaos plan
   (injected executor failures + stragglers at ``REPRO_FAULT_RATE`` —
   CI's ``chaos`` leg): hard gates ``lost_requests == 0`` and
@@ -411,6 +419,99 @@ def bench_plan_sweep() -> Dict[str, object]:
     }
 
 
+def bench_megakernel_sweep() -> Dict[str, object]:
+    """Megakernel contract on a mega-eligible fused chain: engagement
+    (per-trace dispatch counts from ``schedule.mega_stats()``), scalar
+    parity against the ``fori_loop``+``switch`` path and the unfused
+    plan, steady-state retraces across dynamic weight steps, and the
+    megakernel-vs-switch stage timing ratio.
+
+    Runs under whatever backend env the CI leg exports.  On a leg whose
+    backends resolve XLA (or with ``REPRO_MEGAKERNEL=0``) the stage
+    falls back and ``engaged_expected`` is False — everything is still
+    recorded, but only the megakernel leg gates ``mega_dispatches > 0``.
+    ``stage_speedup_x`` is recorded, never value-gated: on CPU the
+    Pallas *interpreter* executes the kernel, so the ratio measures
+    interpreter overhead, not accelerator wins (see ROADMAP)."""
+    from repro.kernels.dispatch import megakernel_enabled, resolve_backend
+
+    P = lambda w, **e: ComponentParams(data_size=2048, chunk_size=128,
+                                       weight=w, extra=e)
+    dag = ProxyDAG(
+        "bench_mega", {"src": 2048},
+        [Edge("quick_sort", ["src"], "a", P(2)),
+         Edge("hash", ["a"], "b", P(3, rounds=2)),
+         Edge("top_k", ["b"], "c", P(2, k=8)),
+         Edge("min_max", ["c"], "out", P(1))],
+        "out")
+    fused = schedule.lower(dag, threshold=1e30, cache=False)
+    unfused = schedule.lower(dag, threshold=0.0, cache=False)
+    engaged_expected = (fused.mega_stage_count > 0
+                        and megakernel_enabled()
+                        and resolve_backend(None) == "pallas")
+
+    space = ParamSpace.from_dag(dag)
+    dyns = list(space.unstack_candidates(space.stack_candidates(
+        dag, space.sample_dynamic(8, space.values(dag), seed=5))))
+    rng = jax.random.PRNGKey(0)
+
+    def jitted(plan, counter):
+        pfn = plan.build_parametric()
+
+        def counted(r, d):
+            counter["n"] += 1
+            return pfn(r, d)
+
+        return jax.jit(counted)
+
+    def steady(fn):
+        fn(rng, dyns[0]).block_until_ready()     # warm
+        t = time.perf_counter()
+        for d in dyns:
+            out = fn(rng, d)
+        out.block_until_ready()
+        return (time.perf_counter() - t) / len(dyns)
+
+    schedule.reset_mega_stats()
+    traces = {"n": 0}
+    jmega = jitted(fused, traces)
+    mega_steady_s = steady(jmega)
+    mega_out = np.asarray(jmega(rng, dyns[0]))
+    stats = schedule.mega_stats()
+    steady_state_retraces = traces["n"] - 1      # first call is the warmup
+
+    # the same fused plan on the fori_loop+switch path (megakernel
+    # disarmed), plus the unfused per-edge plan — the parity oracles
+    prev = os.environ.get("REPRO_MEGAKERNEL")
+    os.environ["REPRO_MEGAKERNEL"] = "0"
+    try:
+        jswitch = jitted(fused, {"n": 0})
+        switch_steady_s = steady(jswitch)
+        switch_out = np.asarray(jswitch(rng, dyns[0]))
+        unfused_out = np.asarray(jitted(unfused, {"n": 0})(rng, dyns[0]))
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_MEGAKERNEL", None)
+        else:
+            os.environ["REPRO_MEGAKERNEL"] = prev
+
+    return {
+        "engaged_expected": engaged_expected,
+        "mega_stages": fused.mega_stage_count,
+        "partition": fused.report()["partition"],
+        "mega_dispatches": stats["mega"],
+        "fallback_dispatches": stats["fallback"],
+        "parity_vs_switch": bool(mega_out == switch_out),
+        "parity_vs_unfused": bool(mega_out == unfused_out),
+        "steady_state_retraces": steady_state_retraces,
+        "weight_steps": len(dyns),
+        "mega_steady_s": mega_steady_s,
+        "switch_steady_s": switch_steady_s,
+        "stage_speedup_x": (switch_steady_s / mega_steady_s
+                            if mega_steady_s > 0 else 0.0),
+    }
+
+
 def bench_structure_sweep() -> Dict[str, float]:
     """Structural vs weight-only tuning under one fixed candidate budget,
     on a fidelity target reachable **only** by a structure change: the
@@ -666,6 +767,7 @@ def bench_compile_vs_run() -> List[str]:
     tune = bench_autotune_sweep()
     population = bench_population_sweep()
     plan_sweep = bench_plan_sweep()
+    mega = bench_megakernel_sweep()
     structure = bench_structure_sweep()
     ai_structure = bench_ai_structure_sweep()
     serve = bench_serve_sweep()
@@ -705,6 +807,23 @@ def bench_compile_vs_run() -> List[str]:
             f"{EXEC_FLOOR:g} (bucketed population execution lost to the "
             f"sequential loop)")
     failures += _baseline_regressions(population, baseline)
+    if mega["engaged_expected"] and mega["mega_dispatches"] < 1:
+        failures.append(
+            f"megakernel_sweep.mega_dispatches="
+            f"{mega['mega_dispatches']} (backends resolve pallas and the "
+            f"megakernel is armed, but no fused stage took the one-kernel "
+            f"lowering)")
+    if not (mega["parity_vs_switch"] and mega["parity_vs_unfused"]):
+        failures.append(
+            f"megakernel_sweep parity broken (vs_switch="
+            f"{mega['parity_vs_switch']}, vs_unfused="
+            f"{mega['parity_vs_unfused']}): the megakernel lowering is "
+            f"not bit-identical to the fori_loop+switch path")
+    if mega["steady_state_retraces"] > 0:
+        failures.append(
+            f"megakernel_sweep.steady_state_retraces="
+            f"{mega['steady_state_retraces']} (dynamic weight steps "
+            f"retraced a warmed megakernel executable)")
     if (structure["structural_deviation"]
             >= structure["weight_only_deviation"]):
         failures.append(
@@ -757,6 +876,7 @@ def bench_compile_vs_run() -> List[str]:
         "autotune_sweep": tune,
         "population_sweep": population,
         "plan_sweep": plan_sweep,
+        "megakernel_sweep": mega,
         "structure_sweep": structure,
         "ai_structure_sweep": ai_structure,
         "serve_sweep": serve,
@@ -767,7 +887,7 @@ def bench_compile_vs_run() -> List[str]:
         "stack_cache_stats": cache_stats(),
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=1) + "\n")
-    rows = _csv_rows(run_path, sweep, tune, population, plan_sweep,
+    rows = _csv_rows(run_path, sweep, tune, population, plan_sweep, mega,
                      structure, ai_structure, serve, serve_faults, lm)
     if failures:
         for row in rows:           # the evidence still lands on failure
@@ -776,7 +896,7 @@ def bench_compile_vs_run() -> List[str]:
     return rows
 
 
-def _csv_rows(run_path, sweep, tune, population, plan_sweep,
+def _csv_rows(run_path, sweep, tune, population, plan_sweep, mega,
               structure, ai_structure, serve, serve_faults,
               lm) -> List[str]:
     return [
@@ -807,6 +927,13 @@ def _csv_rows(run_path, sweep, tune, population, plan_sweep,
                 f"buckets={plan_sweep['bucket_signature']};"
                 f"trip_bounds={plan_sweep['bucket_trip_bounds']};"
                 f"single_batch_trips={plan_sweep['single_batch_trip_bound']}"),
+        csv_row("engine/megakernel_sweep", mega["mega_steady_s"] * 1e6,
+                f"engaged={mega['engaged_expected']};"
+                f"mega_dispatches={mega['mega_dispatches']};"
+                f"fallbacks={mega['fallback_dispatches']};"
+                f"stage_speedup={mega['stage_speedup_x']:.2f}x;"
+                f"parity={mega['parity_vs_switch'] and mega['parity_vs_unfused']};"
+                f"retraces={mega['steady_state_retraces']}"),
         csv_row("engine/structure_sweep", structure["structural_s"] * 1e6,
                 f"structural_dev={structure['structural_deviation']:.3f};"
                 f"weight_only_dev={structure['weight_only_deviation']:.3f};"

@@ -47,7 +47,7 @@ from ..core import schedule as plans
 from ..core.cachetools import hit_rate
 from ..core.dag import ProxyDAG
 from ..core.pool import get_pool
-from ..kernels.dispatch import backend_override
+from ..kernels.dispatch import backend_override, megakernel_enabled
 
 
 # ---------------------------------------------------------------------------
@@ -285,8 +285,17 @@ class Stack(abc.ABC):
         backend_override`) — ``None`` in normal operation, so warm keys
         are unchanged; a degraded dispatch with XLA forced must compile
         (and cache) its own executable rather than be handed one traced
-        with the failing backend."""
-        return (*parts, backend_override())
+        with the failing backend — and the live megakernel arming flag
+        (:func:`repro.kernels.dispatch.megakernel_enabled`), since a
+        MegaStage traces a different program per flag setting."""
+        return (*parts, backend_override(), megakernel_enabled())
+
+    @staticmethod
+    def _plan_cost(plan) -> float:
+        """Recompile cost of one plan's executable under the lowering cost
+        model — what the pool's ``"cost"`` eviction policy minimizes
+        keeping (:func:`repro.core.pool.pool_policy`)."""
+        return float(sum(s.cost for s in plan.stages))
 
     def _compiled_plan(self, plan, batch: bool) -> Callable:
         """Cached jitted ``fn(rng, dyn)`` for this stack's execution model.
@@ -294,7 +303,8 @@ class Stack(abc.ABC):
         dynamic-param setting of the structure reuses it."""
         return get_pool().get(
             self.exec_domain(), self._exec_key(batch, plan.structure_key()),
-            lambda: self._wrap_parametric(plan.build_parametric(), batch))
+            lambda: self._wrap_parametric(plan.build_parametric(), batch),
+            cost=self._plan_cost(plan))
 
     def _wrap_parametric(self, pfn: Callable, batch: bool) -> Callable:
         """Bake this stack's execution model into a jitted parametric fn."""
@@ -334,7 +344,8 @@ class Stack(abc.ABC):
         return get_pool().get(
             self.exec_domain(),
             self._exec_key(("population", n), plan.structure_key()),
-            lambda: self._wrap_population(plan, n))
+            lambda: self._wrap_population(plan, n),
+            cost=n * self._plan_cost(plan))
 
     # -- serving micro-batches (one compiled call per request chunk) ---------
 
@@ -349,7 +360,8 @@ class Stack(abc.ABC):
         return get_pool().get(
             self.exec_domain(),
             self._exec_key(("serve", n), plan.structure_key()),
-            lambda: self._wrap_serve(plan, n))
+            lambda: self._wrap_serve(plan, n),
+            cost=n * self._plan_cost(plan))
 
     def _wrap_serve(self, plan, n: int) -> Callable:
         """Bake this stack's execution model into the request-batched
@@ -854,7 +866,8 @@ class HadoopStack(Stack):
             out_np[b.indices[:b.valid]] = host[:b.valid]
         return jnp.asarray(out_np), io_bytes
 
-    def _cached_stage(self, key: Tuple, make: Callable) -> Callable:
+    def _cached_stage(self, key: Tuple, make: Callable,
+                      cost: float = 0.0) -> Callable:
         # staged executables share this instance's pool domain with the
         # whole-plan executables (keys cannot collide: stage keys lead
         # with a string tag), so the eviction cap bounds both together
@@ -865,7 +878,8 @@ class HadoopStack(Stack):
 
             return jax.jit(counted)
 
-        return get_pool().get(self.exec_domain(), self._exec_key(key), build)
+        return get_pool().get(self.exec_domain(), self._exec_key(key), build,
+                              cost=cost)
 
     def _run_stages(self, dag: ProxyDAG, rng: jax.Array, vmap: bool
                     ) -> Tuple[Any, float]:
@@ -897,7 +911,8 @@ class HadoopStack(Stack):
                 ("stage", vmap, prev is None, stage_key),
                 lambda s=stage, hp=prev is None: (
                     jax.vmap(s, in_axes=(0, 0, None if hp else 0, None))
-                    if vmap else s))
+                    if vmap else s),
+                cost=float(plan.stages[si].cost))
             out = sfn(rng, xs, prev, stage_dyns[si])
             host = np.asarray(out)                   # spill to "disk"
             io_bytes += host.nbytes * 2.0            # write + read back

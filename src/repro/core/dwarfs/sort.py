@@ -8,15 +8,31 @@ import jax.numpy as jnp
 from .base import ComponentParams, DwarfComponent, as_chunks, register
 
 
+def _sort_net_rows(rows: jnp.ndarray) -> jnp.ndarray:
+    """Dispatch a (rows, chunk) tile to the bitonic sort-network kernel.
+
+    The sorted row is multiset-determined, so the network's output is
+    value-identical to ``jnp.sort`` — the sort dwarfs stay in the
+    bit-identical (``parity_tol is None``) class."""
+    from ...kernels.dispatch import default_interpret
+    from ...kernels.sort_net.ops import sort_rows
+    return sort_rows(rows, interpret=default_interpret())
+
+
 @register
 class QuickSort(DwarfComponent):
-    """Full comparison sort per chunk row (XLA lowers to its sort network)."""
+    """Full comparison sort per chunk row (XLA lowers to its sort network;
+    the Pallas path runs the bitonic compare-exchange network)."""
 
     name = "quick_sort"
     dwarf = "sort"
 
+    pallas_capable = True
+
     def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
         rows = as_chunks(x, p)
+        if self.uses_pallas(p):
+            return _sort_net_rows(rows)
         return jnp.sort(rows, axis=1)
 
 
@@ -27,10 +43,17 @@ class MergeSort(DwarfComponent):
     name = "merge_sort"
     dwarf = "sort"
 
+    pallas_capable = True
+
     def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
         rows = as_chunks(x, p)
         c = rows.shape[1]
         h = c // 2
+        if self.uses_pallas(p) and 2 * h == c:
+            # the stable merge of two sorted halves IS the full row sort
+            # whenever the chunk is even (rounded chunks always are) —
+            # run it on the network instead of the rank interleave
+            return _sort_net_rows(rows)
         a = jnp.sort(rows[:, :h], axis=1)
         b = jnp.sort(rows[:, h: 2 * h], axis=1)
         # merge: position of each element = own rank + rank in other run
@@ -66,8 +89,15 @@ class TopK(DwarfComponent):
 
 @register
 class MinMaxCalc(DwarfComponent):
+    """Per-row min/max normalization.  Its Pallas fast path is the
+    megakernel *segment body* (``kernels.megakernel.bodies``) — the
+    standalone apply is one fused normalize either way, so it dispatches
+    nothing itself and stays bit-identical across backends."""
+
     name = "min_max"
     dwarf = "sort"
+
+    pallas_capable = True
 
     def apply(self, x: jnp.ndarray, p: ComponentParams, rng: jax.Array):
         rows = as_chunks(x, p)

@@ -43,6 +43,12 @@ class HardwareSpec:
 
 HW_V5E = HardwareSpec()
 
+#: comparable-unit weight of one sorted element (≈ the log₂n comparator
+#: passes a network sort spends per element at benchmark sizes).  Shared
+#: by the profiler's dwarf-attribution channels and any cost model that
+#: prices sort traffic — one number, one place.
+SORT_ELEM_COST = 10.0
+
 DTYPE_BYTES = {
     "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
     "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,

@@ -18,8 +18,10 @@ cache registers as a :class:`PoolDomain`, lookups route through
 * the domain's own FIFO cap (``cap``), and
 * a pool-wide cap over all ``kind="executable"`` domains
   (``REPRO_POOL_CAP``; unset = per-domain caps only): when the total
-  number of retained compiled programs exceeds it, the globally
-  oldest-inserted executable is evicted, whichever domain holds it.
+  number of retained compiled programs exceeds it, a victim is chosen
+  across all domains by the :func:`pool_policy` — cheapest-to-recompile
+  first under the default ``"cost"`` policy, globally oldest-inserted
+  under ``"fifo"`` (``REPRO_POOL_POLICY``).
 
 Thread-safety rides on :data:`repro.core.cachetools.LOCK` — one reentrant
 process-wide lock shared with the low-level helpers, so pool lookups and
@@ -56,6 +58,32 @@ def pool_cap() -> Optional[int]:
     return max(1, int(raw))
 
 
+POOL_POLICIES = ("cost", "fifo")
+
+
+def pool_policy() -> str:
+    """Pool-wide eviction policy (``REPRO_POOL_POLICY`` env var).
+
+    * ``"cost"`` (default) — under pool-cap pressure, evict the retained
+      executable that is *cheapest to recompile* first (ties broken
+      oldest-first).  Cost is the plan's own model
+      (``sum(stage.cost for stage in plan.stages)``), attached by callers
+      at admission; artifacts admitted without a cost count as ``0.0``
+      and are the preferred victims.
+    * ``"fifo"`` — the legacy policy: globally oldest-inserted first.
+
+    Per-domain ``cap`` enforcement is FIFO under either policy: a domain
+    cap bounds one cache's *churn*, where insertion order is the signal
+    (see the serving engine's ``REPRO_EXEC_CACHE_CAP``)."""
+    raw = os.environ.get("REPRO_POOL_POLICY")
+    if raw is None or raw.strip() == "":
+        return "cost"
+    if raw not in POOL_POLICIES:
+        raise ValueError(f"unknown pool policy {raw!r}; "
+                         f"one of {POOL_POLICIES}")
+    return raw
+
+
 @dataclasses.dataclass
 class PoolDomain:
     """One registered cache: the owning dict plus its policy knobs."""
@@ -72,6 +100,9 @@ class PoolDomain:
                                  "invalidations": 0, "failures": 0})
     #: insertion sequence per key (global order for pool-wide FIFO)
     seq: Dict[Any, int] = dataclasses.field(default_factory=dict)
+    #: recompile-cost per key (the plan cost model; absent = 0.0 — see
+    #: :func:`pool_policy`)
+    cost: Dict[Any, float] = dataclasses.field(default_factory=dict)
 
     def oldest_seq(self) -> Optional[int]:
         if not self.cache:
@@ -92,6 +123,9 @@ class ExecutablePool:
         self._cap = cap               # None -> read REPRO_POOL_CAP live
         self._domains: Dict[str, PoolDomain] = {}
         self._seq = itertools.count()
+        #: which rule chose each eviction victim (surfaced in stats())
+        self._evictions_by_policy: Dict[str, int] = {
+            "domain_fifo": 0, "pool_fifo": 0, "pool_cost": 0}
 
     # -- registration --------------------------------------------------------
 
@@ -139,10 +173,13 @@ class ExecutablePool:
 
     # -- lookup-or-build -----------------------------------------------------
 
-    def get(self, dom: PoolDomain, key: Any, make: Callable[[], Any]) -> Any:
+    def get(self, dom: PoolDomain, key: Any, make: Callable[[], Any], *,
+            cost: Optional[float] = None) -> Any:
         """Fetch ``key`` from ``dom``, building on a miss under the shared
         lock (two threads missing the same key build once), then enforce
-        the domain cap and the pool-wide executable cap."""
+        the domain cap and the pool-wide executable cap.  ``cost`` is the
+        artifact's recompile cost under the plan cost model — consulted
+        only by the ``"cost"`` eviction policy (:func:`pool_policy`)."""
         with LOCK:
             value = dom.cache.get(key)
             if value is not None:
@@ -154,41 +191,62 @@ class ExecutablePool:
             if dom.mirror is not None:
                 dom.mirror["misses"] = dom.mirror.get("misses", 0) + 1
             value = make()
-            self.put(dom, key, value)
+            self.put(dom, key, value, cost=cost)
             return value
 
-    def put(self, dom: PoolDomain, key: Any, value: Any) -> Any:
+    def put(self, dom: PoolDomain, key: Any, value: Any, *,
+            cost: Optional[float] = None) -> Any:
         """Admit an externally built artifact (callers with bespoke miss
         accounting — the engine's compile counters — insert through here
         so eviction bookkeeping stays coherent)."""
         with LOCK:
             dom.cache[key] = value
             dom.seq[key] = next(self._seq)
+            if cost is not None:
+                dom.cost[key] = float(cost)
             self._enforce(dom)
         return value
 
     # -- eviction ------------------------------------------------------------
 
-    def _evict_oldest(self, dom: PoolDomain) -> None:
-        key = next(iter(dom.cache))
+    def _evict(self, dom: PoolDomain, key: Any, policy: str) -> None:
         dom.cache.pop(key)
         dom.seq.pop(key, None)
+        dom.cost.pop(key, None)
         dom.stats["evictions"] += 1
+        self._evictions_by_policy[policy] += 1
         if dom.mirror is not None:
             dom.mirror["evictions"] = dom.mirror.get("evictions", 0) + 1
 
+    def _evict_oldest(self, dom: PoolDomain, policy: str = "domain_fifo") -> None:
+        self._evict(dom, next(iter(dom.cache)), policy)
+
     def _enforce(self, dom: PoolDomain) -> None:
+        # the domain's own cap is always FIFO — it bounds one cache's
+        # churn, where insertion order is the signal callers rely on
         while dom.cap is not None and len(dom.cache) > dom.cap:
-            self._evict_oldest(dom)
+            self._evict_oldest(dom, "domain_fifo")
         cap = pool_cap() if self._cap is None else self._cap
         if cap is None:
             return
+        cost_policy = pool_policy() == "cost"
         while self.executables() > cap:
-            victim = min(
-                (d for d in self._domains.values()
-                 if d.kind == "executable" and d.cache),
-                key=lambda d: d.oldest_seq())
-            self._evict_oldest(victim)
+            if cost_policy:
+                # cheapest-to-recompile first, oldest among equals; an
+                # artifact admitted without a cost counts as 0.0 and is
+                # the preferred victim
+                d, k = min(
+                    ((d, k) for d in self._domains.values()
+                     if d.kind == "executable" for k in d.cache),
+                    key=lambda dk: (dk[0].cost.get(dk[1], 0.0),
+                                    dk[0].seq.get(dk[1], -1)))
+                self._evict(d, k, "pool_cost")
+            else:
+                victim = min(
+                    (d for d in self._domains.values()
+                     if d.kind == "executable" and d.cache),
+                    key=lambda d: d.oldest_seq())
+                self._evict_oldest(victim, "pool_fifo")
 
     def clear(self, name: Optional[str] = None) -> None:
         """Drop every artifact of domain ``name`` (or of every domain)."""
@@ -198,6 +256,7 @@ class ExecutablePool:
             for d in doms:
                 d.cache.clear()
                 d.seq.clear()
+                d.cost.clear()
 
     # -- failure health ------------------------------------------------------
 
@@ -213,6 +272,7 @@ class ExecutablePool:
             if present:
                 dom.cache.pop(key)
                 dom.seq.pop(key, None)
+                dom.cost.pop(key, None)
                 dom.stats["invalidations"] += 1
             return present
 
@@ -249,6 +309,8 @@ class ExecutablePool:
                 "artifacts": sum(len(d.cache)
                                  for d in self._domains.values()),
                 "pool_cap": pool_cap() if self._cap is None else self._cap,
+                "pool_policy": pool_policy(),
+                "evictions_by_policy": dict(self._evictions_by_policy),
                 **totals,
                 "hit_rate": hit_rate(totals),
             }

@@ -22,8 +22,8 @@ from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 
-from .metrics import (CostReport, HloCostAnalyzer, Roofline, analyze_hlo_text,
-                      metric_vector, roofline_from_report)
+from .metrics import (SORT_ELEM_COST, CostReport, HloCostAnalyzer, Roofline,
+                      analyze_hlo_text, metric_vector, roofline_from_report)
 
 
 @dataclasses.dataclass
@@ -169,7 +169,7 @@ def decompose_to_dwarfs(report: CostReport) -> Dict[str, float]:
         "gemm": plain if attn > 0 else 0.0,
         "attention": attn / 2.0,
         "transform": report.fft_elems * 10.0,
-        "sort": report.sort_elems * 10.0,
+        "sort": report.sort_elems * SORT_ELEM_COST,
         "sampling": report.rng_elems * 4.0,
         "graph": report.gather_elems * 2.0,
         "statistic": report.reduce_elems,

@@ -20,7 +20,13 @@ them uniformly.  :func:`lower` turns a DAG into an
   of per edge — cutting host-spill volume.  The fusion decision is fed
   by the :mod:`repro.core.engine` compositional cost model (cached
   per-edge body reports) under ``REPRO_FUSION_THRESHOLD``; ``0``
-  disables fusion (the legacy one-stage-per-edge path).
+  disables fusion (the legacy one-stage-per-edge path).  A fused stage
+  whose members all carry registered Pallas kernel bodies is a
+  **MegaStage** (``FusedStage.mega``): when the live dispatch resolves
+  every member to the ``"pallas"`` backend it executes as *one*
+  :mod:`repro.kernels.megakernel` kernel — grid over the segments,
+  carry resident in VMEM scratch, per-segment operand loads pipelined —
+  bit-identical to (and demotable per trace to) the switch path.
 * **Bucket schedules** — a population of dynamic-param candidates
   executed as one vmapped batched ``while`` runs max-over-candidates
   trips, so one straggler inflates the whole batch (the
@@ -177,10 +183,30 @@ class FusedStage:
     dst: str                       # stage output (last member's dst)
     data_size: int                 # carry buffer size of the fused loop
     cost: float                    # Σ weight × body cost at lowering time
+    #: megakernel *capability* (a MegaStage): every member is
+    #: pallas_capable with a registered bit-identical kernel body and the
+    #: carry fits VMEM.  Structure-only — whether a trace actually takes
+    #: the one-kernel form is decided per dispatch (see ``_mega_out``)
+    mega: bool = False
 
     @property
     def fused(self) -> bool:
         return len(self.members) > 1
+
+
+def _mega_eligible(group: Sequence[Edge]) -> bool:
+    """May this fused group lower to the one-kernel megakernel?  Every
+    member must be ``pallas_capable`` *and* have a registered segment
+    body under its params, and the shared carry must fit the VMEM
+    budget.  Pure structure — no env/backend reads — so the flag caches
+    with the plan."""
+    from ..kernels.megakernel import CARRY_VMEM_BYTES, mega_capable
+    if len(group) < 2:
+        return False
+    if 4 * group[-1].params.rounded().data_size > CARRY_VMEM_BYTES:
+        return False
+    return all(get_component(e.component).pallas_capable
+               and mega_capable(e.component, e.params) for e in group)
 
 
 def _partition(dag: ProxyDAG, edges: Sequence[Edge],
@@ -203,7 +229,8 @@ def _partition(dag: ProxyDAG, edges: Sequence[Edge],
                        src=tuple(edges[g[0]].src),
                        dst=edges[g[-1]].dst,
                        data_size=edges[g[-1]].params.data_size,
-                       cost=sum(costs[i] for i in g))
+                       cost=sum(costs[i] for i in g),
+                       mega=_mega_eligible([edges[i] for i in g]))
             for g in groups]
 
 
@@ -280,6 +307,70 @@ def _fused_out(members: Sequence[Tuple[int, Edge]], x: jnp.ndarray,
         return jax.lax.switch(seg, branches, (carry, local))
 
     return jax.lax.fori_loop(0, total, body, x0)
+
+
+#: per-trace megakernel dispatch counters: "mega" — a MegaStage traced
+#: through the one-kernel path; "fallback" — a MegaStage demoted to the
+#: switch path at trace time (degraded/forced backend, REPRO_MEGAKERNEL
+#: off, a traced kernel-static extra).  Non-eligible stages don't count.
+MEGA_STATS = {"mega": 0, "fallback": 0}
+
+
+def mega_stats() -> Dict[str, int]:
+    return dict(MEGA_STATS)
+
+
+def reset_mega_stats() -> None:
+    for k in MEGA_STATS:
+        MEGA_STATS[k] = 0
+
+
+def _mega_out(members: Sequence[Tuple[int, Edge]], x: jnp.ndarray,
+              rng: jax.Array, dyn_stage: Optional[Tuple]
+              ) -> Optional[jnp.ndarray]:
+    """One-kernel form of :func:`_fused_out` — same member order, same
+    per-member trip counts, bodies value-identical per repeat (and
+    rng-free, which registration enforces), so the result is
+    bit-identical to the switch path.
+
+    Returns ``None`` when the *live* dispatch resolves away from the
+    megakernel — ``REPRO_MEGAKERNEL`` off, any member's backend (env,
+    per-edge pin, or the circuit breaker's :func:`forced_backend`
+    degrade) resolving to ``"xla"``, a kernel-static extra arriving as a
+    traced scalar, or a non-f32 carry — and the caller falls back to
+    :func:`_fused_out`.  The decision happens at trace time; every
+    executable cache key carries the backend override and the megakernel
+    flag, so demoted and promoted traces never share an executable."""
+    from ..kernels.dispatch import default_interpret, megakernel_enabled
+    from ..kernels.megakernel import mega_body, mega_stage_kernel
+    if not megakernel_enabled():
+        return None
+    ws, bodies = [], []
+    for m, (ei, e) in enumerate(members):
+        p = e.params.rounded()
+        dyn = dyn_stage[m] if dyn_stage is not None else None
+        if dyn and any(kk != "weight" for kk in dyn):
+            return None          # traced extras can't be kernel statics
+        comp = get_component(e.component)
+        if not comp.uses_pallas(p):
+            return None
+        body = mega_body(e.component, p)
+        if body is None:
+            return None
+        ws.append(dyn["weight"] if dyn and "weight" in dyn else p.weight)
+        bodies.append(body)
+    x0 = fit_buffer(x, members[0][1].params.rounded().data_size)
+    if x0.dtype != jnp.float32:
+        return None
+    weights = jnp.stack([jnp.asarray(w, jnp.int32) for w in ws])
+    out = mega_stage_kernel(x0, weights, bodies,
+                            interpret=default_interpret())
+    # The kernel's buffer is bit-identical to the switch path, but XLA may
+    # fuse a downstream reduce *into* the interpret-mode lowering with a
+    # different accumulation order than it picks against the switch path's
+    # opaque while-loop output.  Pin the boundary so consumers see the same
+    # opaque producer either way and the whole program stays bit-identical.
+    return jax.lax.optimization_barrier(out)
 
 
 # ---------------------------------------------------------------------------
@@ -389,12 +480,17 @@ class ExecutionPlan:
     def fused_stage_count(self) -> int:
         return sum(1 for s in self.stages if s.fused)
 
+    @property
+    def mega_stage_count(self) -> int:
+        return sum(1 for s in self.stages if s.mega)
+
     def report(self) -> Dict[str, Any]:
         """Lowering diagnostics (the ``plan_sweep`` bench section)."""
         return {
             "edges": len(self.edges),
             "stages": len(self.stages),
             "fused_stages": self.fused_stage_count,
+            "mega_stages": self.mega_stage_count,
             "threshold": self.threshold,
             "partition": [list(s.members) for s in self.stages],
             "stage_costs": [s.cost for s in self.stages],
@@ -421,10 +517,17 @@ class ExecutionPlan:
 
         members = [(ei, self.edges[ei]) for ei in stage.members]
         first = members[0][1]
+        mega = stage.mega
 
         def fused(rng, xs, prev, dyn_stage):
-            out = _fused_out(members, _gather_inputs(first, list(xs)), rng,
-                             dyn_stage)
+            x = _gather_inputs(first, list(xs))
+            out = _mega_out(members, x, rng, dyn_stage) if mega else None
+            if out is not None:
+                MEGA_STATS["mega"] += 1          # per trace, not per call
+            else:
+                if mega:
+                    MEGA_STATS["fallback"] += 1
+                out = _fused_out(members, x, rng, dyn_stage)
             return _accumulate(prev, out)
 
         return fused

@@ -74,6 +74,22 @@ def default_interpret(platform: Optional[str] = None) -> bool:
     return p not in _PALLAS_PLATFORMS
 
 
+def megakernel_enabled() -> bool:
+    """Whether mega-eligible fused stages may lower to the one-kernel
+    Pallas megakernel (``REPRO_MEGAKERNEL``; unset/empty = on).  Off, an
+    eligible stage keeps the bit-identical ``fori_loop`` + ``lax.switch``
+    path.  The flag only *arms* the megakernel — a stage still takes it
+    only when every member's backend resolves to ``"pallas"``, so
+    ``REPRO_BACKEND``, per-edge ``extra["backend"]`` pins and the
+    :func:`forced_backend` degrade all demote it per dispatch.  Part of
+    every ``Stack._exec_key``: flipping the knob can never hand a caller
+    an executable traced for the other lowering."""
+    env = os.environ.get("REPRO_MEGAKERNEL")
+    if env is None or env.strip() == "":
+        return True
+    return env not in ("0", "false", "False")
+
+
 def resolve_backend(requested: Optional[str] = None) -> str:
     """Resolve a backend request to a concrete ``"pallas"`` or ``"xla"``.
 

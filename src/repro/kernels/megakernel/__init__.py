@@ -1,0 +1,2 @@
+from .bodies import mega_body, mega_capable
+from .kernel import CARRY_VMEM_BYTES, mega_stage_kernel

@@ -1,0 +1,152 @@
+"""Registered in-kernel segment bodies for the FusedStage megakernel.
+
+A *body* is a pure ``flat_f32 -> flat_f32`` function over the stage's
+carry buffer replicating exactly one repeat of a dwarf component — the
+same value :func:`repro.core.dag._edge_out`'s loop body produces — as
+plain jnp ops traceable *inside* a Pallas kernel (no nested
+``pallas_call``, no rng).  Only components whose ``apply`` ignores the
+rng and whose per-repeat output is value-identical to the XLA lowering
+may register here; that is what makes the one-kernel stage bit-identical
+to the ``fori_loop`` + ``lax.switch`` path.
+
+:func:`mega_body` returns ``None`` when a component has no registered
+body **or** its params break the identity contract (a chunk-row body
+whose ``parallelism`` lane split in ``DwarfComponent.__call__`` would
+re-tile lanes, a non-divisible chunk, a dynamic kernel-static extra) —
+``core/schedule.py`` then keeps the stage on the switch path.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+MegaBody = Callable[[jnp.ndarray], jnp.ndarray]
+
+#: sentinel the top-k max-sweep masks claimed maxima with (must match
+#: repro.kernels.topk.kernel.NEG_INF for bit-identity with the kernel)
+_NEG_INF = -3.4e38
+
+
+def _lane_split_clean(p) -> bool:
+    """Mirror ``DwarfComponent.__call__``'s parallelism lane split: a
+    chunk-row body is safe iff the split either does not engage or cuts
+    the buffer into whole chunk rows (then vmap-over-lanes ≡ one rowwise
+    pass over the full buffer)."""
+    if p.parallelism <= 1:
+        return True
+    size = p.data_size
+    lanes = min(p.parallelism, max(1, size // max(p.chunk_size, 8)))
+    if lanes <= 1 or size % lanes != 0:
+        return True                     # __call__ falls through to apply()
+    return (size // lanes) % p.chunk_size == 0
+
+
+def _static_int(v) -> Optional[int]:
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return None
+    return max(int(round(float(v))), 0)
+
+
+def _body_hash(p) -> Optional[MegaBody]:
+    rounds = _static_int(p.extra.get("rounds", 4))
+    if rounds is None:
+        return None
+
+    def body(flat: jnp.ndarray) -> jnp.ndarray:
+        from ...core.dwarfs.base import _mix32_round, as_u32, u32_to_f32
+        u = as_u32(flat)
+        for _ in range(rounds):
+            u = _mix32_round(u)
+        return u32_to_f32(u)
+
+    return body
+
+
+def _body_top_k(p) -> Optional[MegaBody]:
+    c = p.chunk_size
+    k = _static_int(p.extra.get("k", 32))
+    if k is None or k < 1:
+        return None
+    k = min(k, c)
+
+    def body(flat: jnp.ndarray) -> jnp.ndarray:
+        x = flat.reshape(-1, c)
+        rows = x.shape[0]
+        cols = jax.lax.broadcasted_iota(jnp.int32, (rows, c), 1)
+        vals = []
+        for _ in range(k):        # the topk kernel's (max, mask) sweep
+            m = x.max(axis=1)
+            first = jnp.min(jnp.where(x == m[:, None], cols, c), axis=1)
+            vals.append(m)
+            x = jnp.where(cols == first[:, None], _NEG_INF, x)
+        v = jnp.stack(vals, axis=1)
+        reps = -(-c // k)
+        return jnp.tile(v, (1, reps))[:, :c].reshape(-1)
+
+    return body
+
+
+def _body_full_sort(p) -> Optional[MegaBody]:
+    # quick_sort sorts every chunk row; merge_sort merges two sorted
+    # halves, which equals the full row sort whenever the chunk is even
+    # (rounded chunks are multiples of 8, so always here)
+    c = p.chunk_size
+    if c % 2:
+        return None
+
+    def body(flat: jnp.ndarray) -> jnp.ndarray:
+        from ..sort_net.kernel import bitonic_sort_rows, next_pow2
+        rows = flat.reshape(-1, c)
+        pn = next_pow2(c) - c
+        if pn:
+            rows = jnp.concatenate(
+                [rows, jnp.full((rows.shape[0], pn), jnp.inf, rows.dtype)],
+                axis=1)
+        return bitonic_sort_rows(rows)[:, :c].reshape(-1)
+
+    return body
+
+
+def _body_min_max(p) -> Optional[MegaBody]:
+    c = p.chunk_size
+
+    def body(flat: jnp.ndarray) -> jnp.ndarray:
+        rows = flat.reshape(-1, c)
+        mn = rows.min(axis=1, keepdims=True)
+        mx = rows.max(axis=1, keepdims=True)
+        return ((rows - mn) / jnp.maximum(mx - mn, 1e-6)).reshape(-1)
+
+    return body
+
+
+#: component name -> body factory.  hash is elementwise; the rest view
+#: the carry as (rows, chunk) and must survive the lane-split check.
+_FACTORIES = {
+    "hash": _body_hash,
+    "top_k": _body_top_k,
+    "quick_sort": _body_full_sort,
+    "merge_sort": _body_full_sort,
+    "min_max": _body_min_max,
+}
+_CHUNK_ROW = frozenset(("top_k", "quick_sort", "merge_sort", "min_max"))
+
+
+def mega_body(component: str, p) -> Optional[MegaBody]:
+    """The registered segment body for ``component`` under (rounded)
+    params ``p``, or ``None`` when no bit-identical body exists."""
+    factory = _FACTORIES.get(component)
+    if factory is None:
+        return None
+    p = p.rounded()
+    if p.data_size % p.chunk_size:          # rounded() guarantees this,
+        return None                         # but never trust a caller
+    if component in _CHUNK_ROW and not _lane_split_clean(p):
+        return None
+    return factory(p)
+
+
+def mega_capable(component: str, p) -> bool:
+    return mega_body(component, p) is not None

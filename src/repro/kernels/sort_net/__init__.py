@@ -1,0 +1,3 @@
+from .kernel import bitonic_sort_rows, sort_net_kernel
+from .ops import sort_rows
+from .ref import sort_rows_ref

@@ -1,0 +1,73 @@
+"""Row-wise bitonic sort network Pallas kernel — sort dwarf hot spot.
+
+Each program owns a (bm, N) row tile in VMEM and sorts every row
+ascending with a bitonic network: log2(N)·(log2(N)+1)/2 compare-exchange
+stages, each a static reshape + min/max + select.  The network is
+data-independent — no gathers, no data-dependent control flow — so it
+lowers to the TPU vector unit directly, where XLA's variadic ``sort``
+falls back to a serial comparator loop.
+
+The network body (:func:`bitonic_sort_rows`) is pure jnp over values, not
+refs, so the exact same comparator sequence also serves as the sort
+segment body inside the :mod:`repro.kernels.megakernel` fused-stage
+kernel (a nested ``pallas_call`` is not expressible there).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def bitonic_sort_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """Sort each row of a (rows, n) array ascending; n must be a power of
+    two (callers pad with the dtype's maximum so pads sink to the tail).
+
+    Stage (k, j) pairs element i with i^j.  The reshape to
+    (rows, n/(2j), 2, j) makes those partners adjacent without a gather,
+    and because j <= k/2 the ascending/descending direction ``(i & k)``
+    is constant within each 2j-group — one broadcast select per stage.
+    """
+    rows, n = x.shape
+    if n & (n - 1):
+        raise ValueError(f"bitonic_sort_rows needs a power-of-two row "
+                         f"length, got {n}")
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            y = x.reshape(rows, n // (2 * j), 2, j)
+            a, b = y[:, :, 0, :], y[:, :, 1, :]
+            g = jnp.arange(n // (2 * j), dtype=jnp.int32) * (2 * j)
+            asc = ((g & k) == 0)[None, :, None]
+            lo, hi = jnp.minimum(a, b), jnp.maximum(a, b)
+            x = jnp.stack([jnp.where(asc, lo, hi), jnp.where(asc, hi, lo)],
+                          axis=2).reshape(rows, n)
+            j //= 2
+        k *= 2
+    return x
+
+
+def _sort_kernel(x_ref, o_ref):
+    o_ref[...] = bitonic_sort_rows(x_ref[...])
+
+
+def sort_net_kernel(x: jnp.ndarray, *, block_m: int = 256,
+                    interpret: bool = True) -> jnp.ndarray:
+    M, N = x.shape
+    bm = min(block_m, M)
+    assert M % bm == 0
+    return pl.pallas_call(
+        _sort_kernel,
+        grid=(M // bm,),
+        in_specs=[pl.BlockSpec((bm, N), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(x)

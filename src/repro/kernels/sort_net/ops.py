@@ -1,0 +1,40 @@
+"""jit'd wrapper for the bitonic sort network (row + length padding)."""
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..dispatch import default_interpret
+from .kernel import next_pow2, sort_net_kernel
+
+
+def _pad_max(dtype) -> jnp.ndarray:
+    """The dtype's maximum — ascending sort pushes pads past every real
+    element, so slicing the first N columns recovers the sorted row."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def sort_rows(x: jnp.ndarray, *, block_m: int = 256,
+              interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Sort each row of a (M, N) array ascending via the bitonic network;
+    any M and N (rows pad to the block multiple, lengths to the next
+    power of two)."""
+    if interpret is None:
+        interpret = default_interpret()
+    M, N = x.shape
+    bm = min(block_m, M)
+    pm = (-M) % bm
+    pn = next_pow2(N) - N
+    xp = x
+    if pn:
+        xp = jnp.concatenate(
+            [xp, jnp.full((M, pn), _pad_max(x.dtype), x.dtype)], axis=1)
+    if pm:
+        xp = jnp.concatenate(
+            [xp, jnp.full((pm, xp.shape[1]), _pad_max(x.dtype), x.dtype)])
+    out = sort_net_kernel(xp, block_m=bm, interpret=interpret)
+    return out[:M, :N]

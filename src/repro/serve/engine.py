@@ -98,7 +98,7 @@ from ..core import schedule as plans
 from ..core.dag import ProxyDAG
 from ..core.pool import ExecutablePool, get_pool
 from ..faults import FaultPlan, InjectedFailure
-from ..kernels.dispatch import forced_backend
+from ..kernels.dispatch import forced_backend, megakernel_enabled
 
 #: virtual-clock calibration: modeled cost units (flops + vpu + bytes)
 #: retired per second, plus a fixed per-dispatch overhead — the absolute
@@ -605,8 +605,11 @@ class ServingEngine:
                     f"injected executor failure for rids "
                     f"{sorted(r.rid for r in failing)}")
         if not sess.execute:
+            # warm-form identity mirrors Stack._exec_key: backend tag +
+            # the megakernel arming flag (a flag flip mid-session is a
+            # different compiled form, so it must model cold)
             wkey = (g["plan"].structure_key(), b,
-                    "xla" if degraded else None)
+                    "xla" if degraded else None, megakernel_enabled())
             cold = sess.virtual_storms > 0 and wkey not in sess.virtual_warm
             sess.virtual_warm.add(wkey)
             service = (max(sess.costs[r.rid] for r in chunk[:valid])

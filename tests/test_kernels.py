@@ -29,6 +29,7 @@ from repro.core.dwarfs.base import REGISTRY
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.hash_mix import hash_mix, hash_mix_ref
 from repro.kernels.matmul import matmul, matmul_ref
+from repro.kernels.sort_net import sort_rows, sort_rows_ref
 from repro.kernels.topk import topk, topk_ref
 
 #: every component the dispatch layer can route to a Pallas fast path —
@@ -89,6 +90,37 @@ def test_topk_parity_pallas_vs_xla(M, N, k, dtype, rng):
     v2, i2 = topk_ref(x, k)                           # XLA lax.top_k
     assert (np.asarray(v1, np.float32) == np.asarray(v2, np.float32)).all()
     assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
+@pytest.mark.parametrize("M,N", [(16, 128), (10, 100), (64, 256),
+                                 (3, 33), (300, 64), (1, 1)])
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.uint32])
+def test_sort_net_int_parity_vs_lax_sort(M, N, dtype, rng):
+    """Bitonic network vs ``jax.lax.sort``: integer rows must be
+    *bit-identical* (a sort is a permutation — no arithmetic to drift).
+    Non-power-of-two row lengths exercise the pad-to-pow2 path."""
+    x = jax.random.randint(rng, (M, N), -1_000_000, 1_000_000).astype(dtype)
+    a = sort_rows(x, interpret=True)                  # pallas (interpret)
+    b = sort_rows_ref(x)                              # XLA sort network
+    assert a.dtype == x.dtype and a.shape == x.shape
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+@pytest.mark.parametrize("M,N", [(16, 128), (10, 100), (5, 513)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sort_net_float_parity_vs_lax_sort(M, N, dtype, rng):
+    """Float rows sort within the sort dwarfs' parity budget (the network
+    only moves values, so in practice this is exact too — the tolerance
+    is the *contract*, bit-equality the observed behavior)."""
+    x = jax.random.normal(rng, (M, N), dtype)
+    a = sort_rows(x, interpret=True)
+    b = sort_rows_ref(x)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=1e-6, atol=1e-6)
+    # and each output row is a permutation of its input row
+    assert (np.sort(np.asarray(x, np.float32), axis=1)
+            == np.sort(np.asarray(a, np.float32), axis=1)).all()
 
 
 @pytest.mark.parametrize("shape", [(1000,), (4096,), (33,)])

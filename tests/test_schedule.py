@@ -346,3 +346,126 @@ def test_default_bucket_size_follows_devices_and_env(monkeypatch):
     assert schedule.resolve_bucket_size(3) == 1
     monkeypatch.setenv("REPRO_POP_BUCKETS", "1")
     assert schedule.resolve_bucket_size(16) == 16
+
+
+# ---------------------------------------------------------------------------
+# megakernel: one-kernel fused stages ≡ the fori_loop + switch path
+# ---------------------------------------------------------------------------
+
+
+def _mega_dag() -> ProxyDAG:
+    """A private linear chain whose members all have registered megakernel
+    segment bodies (quick_sort/hash/top_k/min_max) — fused under FUSE_ALL
+    it lowers to a single mega-eligible stage."""
+    P = lambda w, **e: ComponentParams(data_size=2048, chunk_size=128,
+                                       weight=w, extra=e)
+    return ProxyDAG(
+        "mega_chain", {"src": 2048},
+        [Edge("quick_sort", ["src"], "a", P(2)),
+         Edge("hash", ["a"], "b", P(3, rounds=2)),
+         Edge("top_k", ["b"], "c", P(2, k=8)),
+         Edge("min_max", ["c"], "out", P(1))],
+        "out")
+
+
+def _run_plan(plan, dag):
+    """Fresh-jitted scalar result (a new jit per call, so flipping env
+    knobs between calls always retraces)."""
+    out = jax.jit(plan.build_parametric())(jax.random.PRNGKey(0),
+                                           dag.dynamic_params())
+    return np.asarray(out)
+
+
+@pytest.fixture
+def pallas_env(monkeypatch):
+    monkeypatch.setenv("REPRO_BACKEND", "pallas")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    monkeypatch.delenv("REPRO_MEGAKERNEL", raising=False)
+
+
+def test_megakernel_stage_is_bit_identical_to_fori_path(pallas_env,
+                                                        monkeypatch):
+    dag = _mega_dag()
+    fused = schedule.lower(dag, threshold=FUSE_ALL, cache=False)
+    unfused = schedule.lower(dag, threshold=0.0, cache=False)
+    assert fused.partition() == ((0, 1, 2, 3),)
+    assert fused.stages[0].mega                 # structural eligibility
+    assert fused.mega_stage_count == 1
+    assert unfused.mega_stage_count == 0
+
+    schedule.reset_mega_stats()
+    a = _run_plan(fused, dag)                   # megakernel engaged
+    assert schedule.mega_stats() == {"mega": 1, "fallback": 0}
+
+    monkeypatch.setenv("REPRO_MEGAKERNEL", "0")
+    schedule.reset_mega_stats()
+    b = _run_plan(fused, dag)                   # same plan, fori+switch
+    assert schedule.mega_stats() == {"mega": 0, "fallback": 1}
+    monkeypatch.delenv("REPRO_MEGAKERNEL", raising=False)
+
+    c = _run_plan(unfused, dag)                 # per-edge path
+    assert a == b, f"megakernel {a!r} != fori_loop {b!r}"
+    assert a == c, f"megakernel {a!r} != unfused {c!r}"
+
+
+def test_megakernel_matches_across_weight_steps(pallas_env, monkeypatch):
+    """Dynamic weights are the one traced input the kernel accepts (the
+    per-segment trip bound): stepping them must track the fori path
+    bit-for-bit, including zero-trip members."""
+    dag = _mega_dag()
+    fused = schedule.lower(dag, threshold=FUSE_ALL, cache=False)
+    space = ParamSpace.from_dag(dag)
+    rows = space.sample_dynamic(4, space.values(dag), seed=11)
+    # force one candidate to all-zero weights (identity stage)
+    for li, leaf in enumerate(space.leaves):
+        if leaf.dynamic and leaf.field == "weight":
+            rows[0, li] = 0
+    batched = space.stack_candidates(dag, rows)
+    rng = jax.random.PRNGKey(0)
+    jm = jax.jit(fused.build_parametric())
+    monkeypatch.setenv("REPRO_MEGAKERNEL", "0")
+    jf = jax.jit(fused.build_parametric())
+    monkeypatch.delenv("REPRO_MEGAKERNEL", raising=False)
+    for dyn in space.unstack_candidates(batched):
+        got = np.asarray(jm(rng, dyn))
+        with_fori = None
+        try:
+            monkeypatch.setenv("REPRO_MEGAKERNEL", "0")
+            with_fori = np.asarray(jf(rng, dyn))
+        finally:
+            monkeypatch.delenv("REPRO_MEGAKERNEL", raising=False)
+        assert got == with_fori
+
+
+def test_megakernel_degrades_under_forced_xla(pallas_env):
+    """The circuit breaker's forced-XLA override must demote a mega stage
+    to the stock path *and* produce the stock result — the degrade
+    contract extends through the megakernel."""
+    from repro.kernels.dispatch import forced_backend
+    dag = _mega_dag()
+    fused = schedule.lower(dag, threshold=FUSE_ALL, cache=False)
+    assert fused.stages[0].mega
+    schedule.reset_mega_stats()
+    with forced_backend("xla"):
+        degraded = _run_plan(fused, dag)
+    st = schedule.mega_stats()
+    assert st["mega"] == 0 and st["fallback"] == 1
+    with forced_backend("xla"):
+        stock = _run_plan(schedule.lower(dag, threshold=0.0, cache=False),
+                          dag)
+    assert degraded == stock
+
+
+def test_megakernel_flag_is_part_of_exec_cache_key(pallas_env, monkeypatch):
+    """Flipping REPRO_MEGAKERNEL between runs on one stack must compile a
+    second executable, never reuse one traced for the other lowering."""
+    from repro.api.stack import OpenMPStack
+    dag = _mega_dag()
+    monkeypatch.setenv("REPRO_FUSION_THRESHOLD", str(FUSE_ALL))
+    stack = OpenMPStack()
+    a = np.asarray(stack.run(dag, rng=jax.random.PRNGKey(0)).result)
+    m0 = stack.exec_domain().stats["misses"]
+    monkeypatch.setenv("REPRO_MEGAKERNEL", "0")
+    b = np.asarray(stack.run(dag, rng=jax.random.PRNGKey(0)).result)
+    assert stack.exec_domain().stats["misses"] == m0 + 1
+    assert a == b

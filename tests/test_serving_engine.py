@@ -131,6 +131,31 @@ def test_eviction_under_cache_pressure(monkeypatch, trace):
     assert rep.cold_dispatches > 0
 
 
+def test_pool_cost_eviction_prefers_cheapest(monkeypatch):
+    """Under pool-cap pressure the default policy evicts the executable
+    that is cheapest to recompile (plan cost model), not the oldest;
+    ``REPRO_POOL_POLICY=fifo`` restores the legacy order.  Artifacts
+    admitted without a cost count as 0.0 — the preferred victims."""
+    from repro.core.pool import ExecutablePool
+    monkeypatch.delenv("REPRO_POOL_POLICY", raising=False)
+    pool = ExecutablePool(cap=2)
+    dom = pool.register("t:cost")
+    pool.put(dom, "expensive", object(), cost=100.0)
+    pool.put(dom, "cheap", object(), cost=1.0)
+    pool.put(dom, "mid", object(), cost=10.0)   # over cap -> evict cheapest
+    assert set(dom.cache) == {"expensive", "mid"}
+    st = pool.stats()
+    assert st["pool_policy"] == "cost"
+    assert st["evictions_by_policy"]["pool_cost"] == 1
+    pool.put(dom, "uncosted", object())          # no cost -> 0.0 -> victim
+    pool.put(dom, "pricey", object(), cost=50.0)
+    assert set(dom.cache) == {"expensive", "pricey"}
+    monkeypatch.setenv("REPRO_POOL_POLICY", "fifo")
+    pool.put(dom, "late", object(), cost=0.5)    # fifo -> evict oldest
+    assert set(dom.cache) == {"pricey", "late"}
+    assert pool.stats()["evictions_by_policy"]["pool_fifo"] == 1
+
+
 def test_stats_surfaces_expose_hit_rate(engine, trace):
     engine.serve(trace, clock="wall", mode="open")
     cs = cache_stats()
