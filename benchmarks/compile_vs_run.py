@@ -44,6 +44,14 @@ Two further gates ride on top:
   lm_train-style target (``ai_fidelity_harness``) by *inserting* an
   attention/recurrent dwarf component, again with zero engine traces
   and zero new body compiles warm.
+* **distill_sweep** — the measurement-to-proxy loop: every
+  ``PROXY_SPECS`` member's measured ``fingerprint`` must reproduce its
+  hand-measured metric dict exactly, and ``StructuralTuner`` targeted at
+  the fingerprint must recover a deviation ≤ the hand-declared-target
+  run's with zero engine traces and zero new body compiles warm; the
+  fingerprint suite then subsets (``core/subset.py``) with full
+  coverage (every member within its cluster's recorded bound) and the
+  compression ratio lands in the payload.
 * **lm_proxy** — the LM-fleet proxy bench must produce non-zero
   accuracy rows for every active dry-run cell (a missing cell is
   regenerated at reduced scale; an unregenerable one raises), with
@@ -94,6 +102,12 @@ EXEC_REPS = int(os.environ.get("REPRO_BENCH_EXEC_REPS", "3"))
 EVAL_REPS = int(os.environ.get("REPRO_BENCH_EVAL_REPS", "5"))
 EVAL_INNER = int(os.environ.get("REPRO_BENCH_EVAL_INNER", "8"))
 STRUCT_BUDGET = int(os.environ.get("REPRO_BENCH_STRUCT_BUDGET", "96"))
+#: candidate budget per distillation run (two tuner runs per proxy — the
+#: hand-target run and the fingerprint-target replay — times six proxies,
+#: so the default stays small)
+DISTILL_BUDGET = int(os.environ.get("REPRO_BENCH_DISTILL_BUDGET", "48"))
+#: clusters kept when subsetting the distilled fingerprint suite
+DISTILL_CLUSTERS = int(os.environ.get("REPRO_BENCH_DISTILL_CLUSTERS", "3"))
 
 #: >20% drop of a gated speedup vs the committed baseline fails the run
 REGRESSION_FRAC = float(os.environ.get("REPRO_BENCH_REGRESSION_FRAC", "0.2"))
@@ -575,6 +589,81 @@ def bench_structure_sweep() -> Dict[str, float]:
     }
 
 
+def bench_distill_sweep() -> Dict[str, object]:
+    """The measurement-to-proxy distillation contract, per proxy:
+
+    1. **Fingerprint fidelity** — ``fingerprint(dag).metrics()`` must
+       equal the engine's measured metric dict *exactly* (the channel
+       basis is lossless by construction; this gate keeps it so).
+    2. **Distilled ≥ hand** — a ``StructuralTuner`` run targeting the
+       measured fingerprint must recover a channel deviation no worse
+       than the identically-budgeted run targeting the hand-declared
+       metric dict, on a detuned (all-weights-1) seed of the same
+       structure.
+    3. **Zero-cost warm** — the fingerprint-target run replays the same
+       deterministic search, so it must hit the process-wide body cache:
+       0 engine traces, 0 new body compiles.
+
+    The distilled fingerprint suite then subsets
+    (:func:`repro.core.subset.subset_fingerprints`,
+    ``DISTILL_CLUSTERS`` representatives): full coverage — every member
+    within its cluster's recorded bound — and the compression ratio land
+    in the payload."""
+    from repro.core.engine import fingerprint
+    from repro.core.subset import subset_fingerprints
+    from repro.core.workloads import seed_components
+
+    pool = seed_components()
+    per: Dict[str, Dict[str, float]] = {}
+    fps = []
+    kw = dict(tol=0.10, max_candidates=DISTILL_BUDGET, generations=2,
+              structure_population=4, mutations_per_parent=2,
+              components=pool, seed=0)
+
+    def _detuned(spec):
+        bench = spec.to_benchmark()
+        for e in bench.dag.edges:
+            e.params.extra["weight"] = 1.0
+        return bench
+
+    t_total = time.perf_counter()
+    for name in sorted(PROXY_SPECS):
+        spec = ProxySpec.from_json(PROXY_SPECS[name])
+        dag = spec.to_dag()
+        hand = engine.measure(dag)               # also warms the bodies
+        fp = fingerprint(dag, name=name)
+        exact = fp.metrics() == hand
+        fps.append(fp)
+        hand_res = StructuralTuner(hand, **kw).tune(_detuned(spec))
+        e0 = engine.stats()
+        fp_res = StructuralTuner(fp, **kw).tune(_detuned(spec))
+        e1 = engine.stats()
+        per[name] = {
+            "fingerprint_exact": float(exact),
+            "hand_deviation": hand_res.final_deviation,
+            "distilled_deviation": fp_res.final_deviation,
+            "engine_traces": e1["traces"] - e0["traces"],
+            "new_body_compiles": fp_res.new_body_compiles,
+        }
+    wall = time.perf_counter() - t_total
+
+    subset = subset_fingerprints(fps, k=min(DISTILL_CLUSTERS, len(fps)),
+                                 seed=0)
+    full_coverage = all(
+        subset.distances[m] <= subset.max_distance[rep] + 1e-12
+        for rep, members in subset.clusters.items() for m in members)
+    return {
+        "budget": DISTILL_BUDGET,
+        "proxies": per,
+        "wall_s": wall,
+        "subset": subset.to_json(),
+        "compression_x": subset.compression_x,
+        "coverage": subset.coverage,
+        "full_coverage": float(full_coverage),
+        "representatives": subset.representatives,
+    }
+
+
 def bench_ai_structure_sweep() -> Dict[str, object]:
     """The AI-dwarf structural contract (``ai_fidelity_harness``, shared
     with ``tests/test_ai_dwarfs.py``): an lm_train-style reference whose
@@ -770,6 +859,7 @@ def bench_compile_vs_run() -> List[str]:
     mega = bench_megakernel_sweep()
     structure = bench_structure_sweep()
     ai_structure = bench_ai_structure_sweep()
+    distill = bench_distill_sweep()
     serve = bench_serve_sweep()
     serve_faults = bench_serve_faults()
     # raises LmProxyError on a missing/unparseable dry-run cell — a dead
@@ -860,6 +950,32 @@ def bench_compile_vs_run() -> List[str]:
             f"ai_structure.new_body_compiles="
             f"{ai_structure['new_body_compiles']:.0f} (mutated plans "
             f"recompiled already-profiled AI components)")
+    for name, row in sorted(distill["proxies"].items()):
+        if not row["fingerprint_exact"]:
+            failures.append(
+                f"distill_sweep.{name}.fingerprint_exact=False (the "
+                f"channel-basis fingerprint no longer reproduces the "
+                f"measured metric dict — the basis went lossy)")
+        if row["distilled_deviation"] > row["hand_deviation"] + 1e-9:
+            failures.append(
+                f"distill_sweep.{name}.distilled_deviation="
+                f"{row['distilled_deviation']:.4f} > hand-target "
+                f"{row['hand_deviation']:.4f} (tuning against the "
+                f"measured fingerprint lost to the hand-declared target)")
+        if row["engine_traces"] > 0:
+            failures.append(
+                f"distill_sweep.{name}.engine_traces="
+                f"{row['engine_traces']:.0f} (fingerprint-target tuning "
+                f"executed the proxy)")
+        if row["new_body_compiles"] > 0:
+            failures.append(
+                f"distill_sweep.{name}.new_body_compiles="
+                f"{row['new_body_compiles']:.0f} (fingerprint-target "
+                f"tuning recompiled already-profiled components)")
+    if not distill["full_coverage"]:
+        failures.append(
+            "distill_sweep.full_coverage=False (a fingerprint fell "
+            "outside its cluster's recorded coverage bound)")
     for c in lm["cells"]:
         if c["acc"] <= 0:
             failures.append(
@@ -879,6 +995,7 @@ def bench_compile_vs_run() -> List[str]:
         "megakernel_sweep": mega,
         "structure_sweep": structure,
         "ai_structure_sweep": ai_structure,
+        "distill_sweep": distill,
         "serve_sweep": serve,
         "serve_faults": serve_faults,
         "lm_proxy": lm,
@@ -888,7 +1005,8 @@ def bench_compile_vs_run() -> List[str]:
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=1) + "\n")
     rows = _csv_rows(run_path, sweep, tune, population, plan_sweep, mega,
-                     structure, ai_structure, serve, serve_faults, lm)
+                     structure, ai_structure, distill, serve, serve_faults,
+                     lm)
     if failures:
         for row in rows:           # the evidence still lands on failure
             print(row, flush=True)
@@ -897,7 +1015,7 @@ def bench_compile_vs_run() -> List[str]:
 
 
 def _csv_rows(run_path, sweep, tune, population, plan_sweep, mega,
-              structure, ai_structure, serve, serve_faults,
+              structure, ai_structure, distill, serve, serve_faults,
               lm) -> List[str]:
     return [
         csv_row("engine/run_path", run_path["steady_state_s"] * 1e6,
@@ -950,6 +1068,16 @@ def _csv_rows(run_path, sweep, tune, population, plan_sweep, mega,
                 f"{'+'.join(ai_structure['attention_class_used'])};"
                 f"engine_traces={ai_structure['engine_traces']:.0f};"
                 f"new_compiles={ai_structure['new_body_compiles']:.0f}"),
+        csv_row("engine/distill_sweep", distill["wall_s"] * 1e6,
+                f"proxies={len(distill['proxies'])};"
+                f"max_distilled_dev="
+                f"{max(r['distilled_deviation'] for r in distill['proxies'].values()):.3f};"
+                f"traces={sum(r['engine_traces'] for r in distill['proxies'].values()):.0f};"
+                f"new_compiles="
+                f"{sum(r['new_body_compiles'] for r in distill['proxies'].values()):.0f};"
+                f"compression={distill['compression_x']:.1f}x;"
+                f"coverage={distill['coverage']:.2f};"
+                f"reps={'+'.join(distill['representatives'])}"),
         csv_row("engine/lm_proxy", lm["mean_accuracy"] * 100,
                 f"cells={lm['n_cells']};"
                 f"mean_acc={lm['mean_accuracy']:.3f};"

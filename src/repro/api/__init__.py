@@ -1,6 +1,6 @@
 """repro.api — the unified execution API of the dwarf methodology.
 
-Three public surfaces, one contract:
+Four public surfaces, one contract:
 
 * **Stack protocol** (:mod:`repro.api.stack`): ``get_stack(name).run(x)``
   executes any proxy DAG, workload, or raw fn on any software stack
@@ -18,6 +18,12 @@ Three public surfaces, one contract:
   gradient-free vectorized tuners — ``sample``/``sample_dynamic`` draw
   candidate matrices, ``stack_candidates``/``unstack_candidates`` convert
   between matrices and the batched dyn pytrees the executables consume.
+* **Distillation pipeline** (:mod:`repro.core.engine` /
+  :mod:`repro.core.subset`): :func:`fingerprint` measures any workload —
+  a jitted fn, a recorded :class:`RunReport`, a ``ServeReport`` — into
+  the engine's channel basis; :func:`tune_structure` accepts the
+  fingerprint directly as its target; :func:`subset_fingerprints` keeps
+  the suite small by clustering fingerprints down to representatives.
 
 Quickstart::
 
@@ -25,17 +31,28 @@ Quickstart::
     spec = ProxySpec.load("proxy_terasort.json")
     report = get_stack(spec.stack).run(spec)
     print(report.wall_s, report.io_bytes)
+
+Distillation quickstart::
+
+    from repro.api import fingerprint, tune_structure
+    fp = fingerprint(my_step_fn, example_args)   # measure anything jitted
+    result = tune_structure(seed_proxy, fp)      # synthesize its proxy
 """
 
 from . import params as params  # imported first: no repro.core dependencies
 from .params import (CORE_FIELDS, EXTRA_BOUNDS, FIELD_BOUNDS, INT_FIELDS,
                      ParamLeaf, ParamSpace, bounds_for)
-from .spec import SPEC_VERSION, ProxySpec, SpecError, validate_spec_json
+from .spec import (SPEC_VERSION, ProxySpec, SpecError,
+                   validate_fingerprint_json, validate_spec_json)
 from .stack import (FAILURE_CLASSES, HadoopStack, MPIStack, OpenMPStack,
                     RunReport, SparkStack, Stack, cache_cap, cache_stats,
                     classify_failure, failure_is_retryable, get_stack,
                     list_stacks, register_stack, reset_cache_stats)
+from ..core.engine import (FINGERPRINT_CHANNELS, FINGERPRINT_VERSION,
+                           WorkloadFingerprint, fingerprint)
 from ..core.pool import ExecutablePool, get_pool, pool_stats
+from ..core.subset import (SubsetReport, normalize_fingerprints,
+                           subset_fingerprints)
 from ..faults import FaultPlan, InjectedFailure, default_fault_rate
 
 
@@ -44,7 +61,11 @@ def tune_structure(proxy, target_metrics, **kw):
     weights — toward ``target_metrics``.
 
     ``proxy`` may be a ``ProxyBenchmark``, ``ProxySpec``, or ``ProxyDAG``;
-    keyword args configure :class:`repro.core.structsearch.StructuralTuner`
+    ``target_metrics`` is either a hand-declared Table-3 metric dict or
+    any measurement with a ``metrics()`` method — in particular a
+    :class:`WorkloadFingerprint` from :func:`fingerprint`, which distills
+    a proxy straight from a measured workload.  Keyword args configure
+    :class:`repro.core.structsearch.StructuralTuner`
     (``max_candidates`` total budget, ``structure_budget_frac`` split,
     ``components`` mutation pool, ``seed_structures``, ...).  Returns a
     :class:`~repro.core.structsearch.StructuralTuneResult` whose ``proxy``
@@ -87,4 +108,7 @@ __all__ = [
     "ExecutablePool", "get_pool", "pool_stats", "serve",
     "FAILURE_CLASSES", "classify_failure", "failure_is_retryable",
     "FaultPlan", "InjectedFailure", "default_fault_rate",
+    "FINGERPRINT_CHANNELS", "FINGERPRINT_VERSION", "WorkloadFingerprint",
+    "fingerprint", "validate_fingerprint_json",
+    "SubsetReport", "normalize_fingerprints", "subset_fingerprints",
 ]

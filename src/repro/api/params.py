@@ -61,6 +61,8 @@ INT_FIELDS = {"data_size", "chunk_size", "parallelism", "weight", "stride",
 
 
 def bounds_for(field: str) -> Tuple[float, float]:
+    """(lo, hi) clamp range for a tunable field, ``EXTRA_BOUNDS`` for
+    free-form ``extra`` keys not in ``FIELD_BOUNDS``."""
     return FIELD_BOUNDS.get(field, EXTRA_BOUNDS)
 
 

@@ -125,6 +125,41 @@ def validate_spec_json(d: Any) -> None:
             _fail("description", "expected string")
 
 
+def validate_fingerprint_json(d: Any) -> None:
+    """Raise :class:`SpecError` with a precise path if ``d`` is not a valid
+    serialized :class:`repro.core.engine.WorkloadFingerprint`."""
+    from ..core.engine import FINGERPRINT_CHANNELS, FINGERPRINT_VERSION
+    if not isinstance(d, dict):
+        _fail("$", f"expected object, got {type(d).__name__}")
+    version = d.get("fingerprint_version")
+    if not isinstance(version, int) or isinstance(version, bool):
+        _fail("fingerprint_version", "expected integer")
+    if version > FINGERPRINT_VERSION:
+        _fail("fingerprint_version",
+              f"fingerprint_version {version} is newer than supported "
+              f"{FINGERPRINT_VERSION}")
+    if not isinstance(d.get("name"), str) or not d.get("name"):
+        _fail("name", "expected non-empty string")
+    if "source" in d and not isinstance(d["source"], str):
+        _fail("source", "expected string")
+    hb = d.get("host_bytes", 0.0)
+    if not _is_num(hb) or hb < 0:
+        _fail("host_bytes", "expected non-negative number")
+    channels = d.get("channels")
+    if not isinstance(channels, dict):
+        _fail("channels", "expected object of channel -> value")
+    for k in FINGERPRINT_CHANNELS:
+        if k not in channels:
+            _fail("channels", f"missing required channel {k!r}")
+        if not _is_num(channels[k]):
+            _fail(f"channels[{k!r}]",
+                  f"expected number, got {type(channels[k]).__name__}")
+    unknown = sorted(set(channels) - set(FINGERPRINT_CHANNELS))
+    if unknown:
+        _fail("channels", f"unknown channel(s) {unknown}; "
+              f"known: {list(FINGERPRINT_CHANNELS)}")
+
+
 @dataclasses.dataclass
 class ProxySpec:
     """Declarative proxy benchmark: DAG + target stack + scale."""

@@ -99,6 +99,7 @@ def cache_stats() -> Dict[str, float]:
 
 
 def reset_cache_stats() -> None:
+    """Zero the process-wide executable-cache counters."""
     for k in CACHE_STATS:
         CACHE_STATS[k] = 0
 
@@ -143,6 +144,8 @@ def classify_failure(exc: BaseException) -> str:
 
 
 def failure_is_retryable(exc: BaseException) -> bool:
+    """True when ``classify_failure`` deems the exception transient —
+    the serving engine's retry/bisection policies key off this."""
     return classify_failure(exc) != "fatal"
 
 
@@ -161,6 +164,11 @@ class RunReport:
     result: Any = None           # the executable's output pytree
     batch: int = 1               # number of rng instances executed
     result_bytes: float = 0.0    # size of the output pytree
+    #: the executed ProxyDAG when the run came from a DAG-bearing
+    #: executable (None for raw callables) — lets
+    #: ``repro.api.fingerprint(report)`` recover the measured channel
+    #: vector without re-running anything
+    dag: Any = dataclasses.field(default=None, repr=False)
 
     @property
     def throughput(self) -> float:
@@ -510,7 +518,7 @@ class Stack(abc.ABC):
         wall = time.perf_counter() - t0
         return RunReport(stack=self.name, wall_s=wall, io_bytes=io_bytes,
                          result=result, batch=1,
-                         result_bytes=_tree_bytes(result))
+                         result_bytes=_tree_bytes(result), dag=dag)
 
     def run_batch(self, executable: Any,
                   rngs: jax.Array) -> RunReport:
@@ -529,7 +537,7 @@ class Stack(abc.ABC):
         wall = time.perf_counter() - t0
         return RunReport(stack=self.name, wall_s=wall, io_bytes=io_bytes,
                          result=result, batch=batch,
-                         result_bytes=_tree_bytes(result))
+                         result_bytes=_tree_bytes(result), dag=dag)
 
     def run_population(self, executable: Any, candidates: Any, *,
                        rng: Optional[jax.Array] = None,
@@ -564,7 +572,7 @@ class Stack(abc.ABC):
         wall = time.perf_counter() - t0
         return RunReport(stack=self.name, wall_s=wall, io_bytes=io_bytes,
                          result=result, batch=n,
-                         result_bytes=_tree_bytes(result))
+                         result_bytes=_tree_bytes(result), dag=dag)
 
     def _execute_batch(self, fn: Callable, rngs: jax.Array
                        ) -> Tuple[Any, float]:
@@ -968,12 +976,14 @@ def register_stack(stack: Stack) -> Stack:
 
 
 def get_stack(name: str) -> Stack:
+    """Look up a registered software stack (``KeyError`` on unknown)."""
     if name not in _STACKS:
         raise KeyError(f"unknown stack {name!r}; known: {sorted(_STACKS)}")
     return _STACKS[name]
 
 
 def list_stacks() -> List[str]:
+    """Registered stack names, sorted."""
     return sorted(_STACKS)
 
 

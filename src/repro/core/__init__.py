@@ -2,9 +2,12 @@
 # methodology — eight dwarf components, DAG-like proxy benchmarks, the
 # profiler (HLO metric vector) and the auto-tuning tool.
 from .autotune import (AutoTuner, PopulationTuner, PopulationTuneResult,
-                       TuneResult, autotune, population_tune, split_budget)
+                       TuneResult, autotune, coerce_target, population_tune,
+                       split_budget)
 from .dag import Edge, ProxyDAG, StructureError
 from .dwarfs import DWARFS, ComponentParams, get_component
+from .engine import (FINGERPRINT_CHANNELS, FINGERPRINT_VERSION,
+                     WorkloadFingerprint, fingerprint)
 from .metrics import (HW_V5E, CostReport, HardwareSpec, Roofline,
                       analyze_hlo_text, eq1_accuracy, metric_vector,
                       roofline_from_report, vector_accuracy)
@@ -14,12 +17,15 @@ from .schedule import (BucketSchedule, ExecutionPlan, FusedStage,
                        fusion_threshold, lower)
 from .structsearch import (Mutation, StructuralTuner, StructuralTuneResult,
                            propose_mutation, structural_tune)
+from .subset import SubsetReport, normalize_fingerprints, subset_fingerprints
 
 __all__ = [
     "AutoTuner", "PopulationTuner", "PopulationTuneResult", "TuneResult",
-    "autotune", "population_tune", "split_budget", "Edge", "ProxyDAG",
-    "StructureError", "DWARFS",
-    "ComponentParams", "get_component", "HW_V5E", "CostReport",
+    "autotune", "coerce_target", "population_tune", "split_budget",
+    "Edge", "ProxyDAG", "StructureError", "DWARFS",
+    "ComponentParams", "get_component",
+    "FINGERPRINT_CHANNELS", "FINGERPRINT_VERSION", "WorkloadFingerprint",
+    "fingerprint", "HW_V5E", "CostReport",
     "HardwareSpec", "Roofline", "analyze_hlo_text", "eq1_accuracy",
     "metric_vector", "roofline_from_report", "vector_accuracy",
     "WorkloadProfile", "characterize", "decompose_to_dwarfs",
@@ -28,4 +34,5 @@ __all__ = [
     "lower",
     "Mutation", "StructuralTuner", "StructuralTuneResult",
     "propose_mutation", "structural_tune",
+    "SubsetReport", "normalize_fingerprints", "subset_fingerprints",
 ]

@@ -80,6 +80,28 @@ def _is_share(k: str) -> bool:
     return k.startswith("mix_") or k in ("vpu_share", "coll_share")
 
 
+def coerce_target(target) -> Dict[str, float]:
+    """Normalize a tuner target to a metric dict.
+
+    Every tuner (:class:`AutoTuner`, :class:`PopulationTuner`,
+    :class:`~repro.core.structsearch.StructuralTuner`) accepts either a
+    hand-declared Table-3 metric dict or any measurement with a
+    ``metrics()`` method — in particular a
+    :class:`~repro.core.engine.WorkloadFingerprint` — so
+    ``tune_structure(proxy, target=fingerprint(fn, args))`` distills a
+    proxy straight from a measurement with no hand-modeling step.
+    """
+    if isinstance(target, dict):
+        return target
+    m = getattr(target, "metrics", None)
+    if callable(m):
+        return m()
+    raise TypeError(
+        f"tuner target must be a metric dict or an object with a "
+        f".metrics() method (e.g. WorkloadFingerprint); got "
+        f"{type(target).__name__}")
+
+
 def _deviations(target: Dict[str, float], proxy: Dict[str, float],
                 keys: Sequence[str]) -> Dict[str, float]:
     """Share metrics deviate in absolute share points; others relatively."""
@@ -102,6 +124,7 @@ class AutoTuner:
                  execute: bool = False,
                  weights: Optional[Dict[str, float]] = None,
                  measurement: str = "engine"):
+        target_metrics = coerce_target(target_metrics)
         self.target = target_metrics
         self.keys = [k for k in metric_keys if abs(target_metrics.get(k, 0.0)) > 1e-12]
         self.tol = tol
@@ -359,6 +382,7 @@ class PopulationTuner:
                  weights: Optional[Dict[str, float]] = None,
                  stratify: bool = True,
                  bucket_size: Optional[int] = None):
+        target_metrics = coerce_target(target_metrics)
         self.target = target_metrics
         self.keys = [k for k in metric_keys
                      if abs(target_metrics.get(k, 0.0)) > 1e-12]

@@ -529,3 +529,206 @@ def measure(dag: ProxyDAG, execute: bool = False, exec_iters: int = 1,
         jax.block_until_ready(out)
         exec_s = (time.perf_counter() - t0) / max(exec_iters, 1)
     return metric_vector(report, host_bytes=host_bytes, exec_time=exec_s)
+
+
+# ---------------------------------------------------------------------------
+# workload fingerprints (measurement -> tuner target)
+# ---------------------------------------------------------------------------
+
+#: schema version stamped into every serialized fingerprint
+FINGERPRINT_VERSION = 1
+
+#: ordered channel names of the fingerprint vector — the engine's flat
+#: basis (:data:`_BASIS_FIELDS`) plus total collective bytes, i.e. exactly
+#: the channels :func:`repro.core.metrics.metric_vector` reads
+FINGERPRINT_CHANNELS: Tuple[str, ...] = _BASIS_FIELDS + ("collective_bytes",)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadFingerprint:
+    """A workload's measured cost signature in the engine's channel basis.
+
+    The lossless intermediate between *measurement* and *tuning*: the 13
+    :data:`FINGERPRINT_CHANNELS` floats are precisely the CostReport fields
+    :func:`~repro.core.metrics.metric_vector` consumes, so
+    ``fp.metrics()`` reproduces the metric dict the measurement would have
+    produced bit-for-bit — and any tuner accepting a Table-3 target dict
+    accepts a fingerprint unchanged (see
+    :func:`repro.core.autotune.coerce_target`).
+
+    Attributes:
+        name: human label for the fingerprinted workload.
+        channels: the channel values, ordered as
+            :data:`FINGERPRINT_CHANNELS`.
+        host_bytes: host-side IO bytes observed alongside (feeds the
+            ``io_fraction`` metric; 0 when unknown).
+        source: provenance tag — ``"fn"`` (HLO cost analysis of a jitted
+            callable), ``"dag"`` (compositional model of a ProxyDAG /
+            spec), ``"report"`` (a CostReport or WorkloadProfile),
+            ``"run"`` (a recorded RunReport), ``"serve"`` (a ServeReport's
+            per-structure aggregate), or ``"json"`` (deserialized).
+        version: schema version (:data:`FINGERPRINT_VERSION`).
+    """
+
+    name: str
+    channels: Tuple[float, ...]
+    host_bytes: float = 0.0
+    source: str = "fn"
+    version: int = FINGERPRINT_VERSION
+
+    def __post_init__(self):
+        if len(self.channels) != len(FINGERPRINT_CHANNELS):
+            raise ValueError(
+                f"fingerprint needs {len(FINGERPRINT_CHANNELS)} channels "
+                f"({', '.join(FINGERPRINT_CHANNELS)}); got "
+                f"{len(self.channels)}")
+
+    def vector(self) -> np.ndarray:
+        """The channel values as a float64 array (fresh copy)."""
+        return np.asarray(self.channels, dtype=np.float64)
+
+    def channel_dict(self) -> Dict[str, float]:
+        """Channel name -> value mapping (insertion-ordered)."""
+        return dict(zip(FINGERPRINT_CHANNELS, self.channels))
+
+    def metrics(self) -> Dict[str, float]:
+        """The tuner-facing metric dict (instruction mix, arithmetic
+        intensity, …) reconstructed from the channels — identical to what
+        :func:`measure` would report for the fingerprinted workload."""
+        return metric_vector(_vec_to_report(self.vector()),
+                             host_bytes=self.host_bytes)
+
+    def to_json(self) -> Dict[str, Any]:
+        """Versioned, JSON-serializable dict (round-trips via
+        :meth:`from_json`)."""
+        return {
+            "fingerprint_version": self.version,
+            "name": self.name,
+            "source": self.source,
+            "host_bytes": float(self.host_bytes),
+            "channels": {k: float(v) for k, v in
+                         zip(FINGERPRINT_CHANNELS, self.channels)},
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "WorkloadFingerprint":
+        """Validate + rebuild a fingerprint serialized by :meth:`to_json`.
+
+        Raises :class:`repro.api.spec.SpecError` with a path-precise
+        message when the payload doesn't match the schema.
+        """
+        from ..api.spec import validate_fingerprint_json  # avoid cycle
+        validate_fingerprint_json(d)
+        return cls(
+            name=str(d["name"]),
+            channels=tuple(float(d["channels"][k])
+                           for k in FINGERPRINT_CHANNELS),
+            host_bytes=float(d.get("host_bytes", 0.0)),
+            source="json",
+            version=int(d["fingerprint_version"]),
+        )
+
+
+def _fingerprint_from_vec(vec: np.ndarray, name: str, host_bytes: float,
+                          source: str) -> WorkloadFingerprint:
+    return WorkloadFingerprint(
+        name=name, channels=tuple(float(x) for x in vec),
+        host_bytes=float(host_bytes), source=source)
+
+
+def fingerprint(obj: Any, *args: Any, name: Optional[str] = None,
+                host_bytes: Optional[float] = None) -> WorkloadFingerprint:
+    """Fingerprint a workload into the engine's channel basis.
+
+    One entry point for every measurement the repo can produce.  Accepts,
+    in dispatch order:
+
+    * a :class:`WorkloadFingerprint` (returned as-is, ``name`` aside);
+    * a serialized fingerprint dict (``{"fingerprint_version": ...}``);
+    * a recorded ``repro.api.RunReport`` — uses the report's attached DAG
+      through the compositional model, scaled by the report's batch width,
+      with ``host_bytes`` defaulting to the measured ``io_bytes``;
+    * a ``repro.api.ServeReport`` — the request-count-weighted sum of the
+      served structures' compositional reports;
+    * a ``ProxyDAG`` / ``ProxySpec`` / ``ProxyBenchmark`` — the cached
+      compositional cost model (zero compiles warm);
+    * a ``CostReport`` or ``repro.core.WorkloadProfile``;
+    * any jittable callable plus its (abstract or concrete) example
+      ``*args`` — lowered once and HLO-cost-analyzed, exactly like
+      :func:`repro.core.profiler.characterize`.
+
+    Returns a versioned :class:`WorkloadFingerprint` whose ``metrics()``
+    feed straight into ``repro.api.tune_structure(proxy, target=fp)``.
+    """
+    if isinstance(obj, WorkloadFingerprint):
+        if name is not None and name != obj.name:
+            return dataclasses.replace(obj, name=name)
+        return obj
+    if isinstance(obj, dict) and "fingerprint_version" in obj:
+        fp = WorkloadFingerprint.from_json(obj)
+        return fp if name is None else dataclasses.replace(fp, name=name)
+
+    # recorded stack run: RunReport carries the executed DAG
+    if hasattr(obj, "wall_s") and hasattr(obj, "io_bytes"):
+        dag = getattr(obj, "dag", None)
+        if dag is None:
+            raise ValueError(
+                "RunReport has no attached DAG (raw-callable runs are not "
+                "fingerprintable from the report; fingerprint the callable "
+                "directly: fingerprint(fn, *args))")
+        vec = _report_to_vec(structural_report(dag)) * max(
+            int(getattr(obj, "batch", 1) or 1), 1)
+        hb = float(obj.io_bytes) if host_bytes is None else host_bytes
+        return _fingerprint_from_vec(
+            vec, name or f"run:{obj.stack}", hb, "run")
+
+    # serve trace: per-structure aggregate weighted by request mix
+    if hasattr(obj, "structure_mix") and hasattr(obj, "templates"):
+        mix = dict(obj.structure_mix)
+        templates = dict(obj.templates or {})
+        missing = sorted(set(mix) - set(templates))
+        if not mix or missing:
+            raise ValueError(
+                "ServeReport is missing structure templates for "
+                f"{missing or 'all structures'}; re-run serve() to record "
+                "them")
+        vec = np.zeros(len(FINGERPRINT_CHANNELS), dtype=np.float64)
+        for sname, count in sorted(mix.items()):
+            vec += float(count) * _report_to_vec(
+                structural_report(templates[sname]))
+        return _fingerprint_from_vec(
+            vec, name or f"serve:{obj.stack}",
+            0.0 if host_bytes is None else host_bytes, "serve")
+
+    dag = None
+    if isinstance(obj, ProxyDAG):
+        dag = obj
+    elif hasattr(obj, "to_dag"):                       # ProxySpec
+        dag = obj.to_dag()
+    elif isinstance(getattr(obj, "dag", None), ProxyDAG):  # ProxyBenchmark
+        dag = obj.dag
+    if dag is not None:
+        return _fingerprint_from_vec(
+            _report_to_vec(structural_report(dag)),
+            name or getattr(obj, "name", None) or "dag",
+            0.0 if host_bytes is None else host_bytes, "dag")
+
+    rep = obj.report if hasattr(obj, "report") else obj  # WorkloadProfile
+    if isinstance(rep, CostReport):
+        return _fingerprint_from_vec(
+            _report_to_vec(rep),
+            name or getattr(obj, "name", None) or "report",
+            0.0 if host_bytes is None else host_bytes, "report")
+
+    if callable(obj):
+        rep = _analyze(obj, args)
+        return _fingerprint_from_vec(
+            _report_to_vec(rep),
+            name or getattr(obj, "__name__", "fn"),
+            0.0 if host_bytes is None else host_bytes, "fn")
+
+    raise TypeError(
+        f"cannot fingerprint {type(obj).__name__}: expected a callable, "
+        "ProxyDAG/ProxySpec/ProxyBenchmark, CostReport/WorkloadProfile, "
+        "RunReport, ServeReport, WorkloadFingerprint, or serialized "
+        "fingerprint dict")

@@ -377,6 +377,7 @@ _POOL = ExecutablePool()
 
 
 def get_pool() -> ExecutablePool:
+    """The process-wide `ExecutablePool` singleton."""
     return _POOL
 
 

@@ -41,7 +41,7 @@ import numpy as np
 
 from .autotune import (DEFAULT_METRICS, DEFAULT_STRUCTURE_BUDGET_FRAC,
                        DEFAULT_WEIGHTS, PopulationTuner, _deviations,
-                       split_budget)
+                       coerce_target, split_budget)
 from .dag import (Edge, ProxyDAG, StructureError, _neighbor_params,
                   insert_accumulating_edge, insert_edge, merge_chain,
                   remove_edge, split_edge, swap_component)
@@ -366,6 +366,7 @@ class StructuralTuner:
                  stack: str = "openmp",
                  seed: int = 0,
                  weights: Optional[Dict[str, float]] = None):
+        target_metrics = coerce_target(target_metrics)
         self.target = target_metrics
         self.keys = [k for k in metric_keys
                      if abs(target_metrics.get(k, 0.0)) > 1e-12]

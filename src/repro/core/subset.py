@@ -1,0 +1,229 @@
+"""Workload subsetting over fingerprint space (PAPERS.md, arXiv 1409.0792).
+
+"Characterizing and Subsetting Big Data Workloads" keeps a benchmark suite
+small as scenarios multiply: normalize each workload's measured
+characteristics, cluster, and keep one representative per cluster.  This
+module runs that pipeline over :class:`~repro.core.engine.WorkloadFingerprint`
+vectors:
+
+1. **Normalize** — each fingerprint's channel vector is scaled to *shares*
+   (``v / sum(v)``, making workloads of different absolute size
+   comparable) and then z-scored per channel across the suite, so no
+   single high-magnitude channel (e.g. ``bytes_accessed``) dominates the
+   distance metric.
+2. **Cluster** — deterministic seeded Lloyd k-means in the normalized
+   space (numpy only; an empty cluster is reseeded to the point farthest
+   from its representative, so requesting ``k == n`` degenerates cleanly
+   to one-singleton-per-workload).
+3. **Represent** — each cluster's representative is the *member closest
+   to the centroid* (a real workload, not a synthetic mean), and the
+   :class:`SubsetReport` records per-cluster coverage: the max
+   member-to-representative distance.
+
+``subset_fingerprints(fps, max_distance=...)`` instead grows ``k`` until
+every member sits within the distance bound of its representative — the
+"how few proxies can I keep?" question answered directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .engine import WorkloadFingerprint
+
+#: version stamped into serialized subset reports
+SUBSET_VERSION = 1
+
+
+def normalize_fingerprints(fps: Sequence[WorkloadFingerprint]
+                           ) -> np.ndarray:
+    """Stack fingerprints into the normalized ``(n, channels)`` matrix the
+    clustering runs on: per-fingerprint share scaling, then per-channel
+    z-scoring across the suite (constant channels map to 0)."""
+    if not fps:
+        raise ValueError("need at least one fingerprint")
+    mat = np.stack([fp.vector() for fp in fps])
+    totals = np.maximum(mat.sum(axis=1, keepdims=True), 1e-12)
+    shares = mat / totals
+    mean = shares.mean(axis=0)
+    std = shares.std(axis=0)
+    std = np.where(std > 1e-12, std, 1.0)
+    return (shares - mean) / std
+
+
+def _kmeans(x: np.ndarray, k: int, seed: int,
+            iters: int = 64) -> np.ndarray:
+    """Seeded Lloyd k-means; returns the ``(n,)`` label vector.
+
+    Initialization is k-means++-style (greedy farthest-point after a
+    seeded first pick) and empty clusters reseed to the point farthest
+    from its current centroid, so every one of the ``k`` clusters ends
+    non-empty whenever ``k <= n``."""
+    n = x.shape[0]
+    rng = np.random.RandomState(seed)
+    centers = np.empty((k, x.shape[1]))
+    first = int(rng.randint(n))
+    centers[0] = x[first]
+    d2 = ((x - centers[0]) ** 2).sum(axis=1)
+    for j in range(1, k):
+        centers[j] = x[int(np.argmax(d2))]
+        d2 = np.minimum(d2, ((x - centers[j]) ** 2).sum(axis=1))
+    labels = np.zeros(n, dtype=int)
+    for _ in range(iters):
+        dists = ((x[:, None, :] - centers[None, :, :]) ** 2).sum(axis=2)
+        new_labels = dists.argmin(axis=1)
+        for j in range(k):
+            members = x[new_labels == j]
+            if len(members):
+                centers[j] = members.mean(axis=0)
+            else:  # reseed an emptied cluster to the worst-covered point
+                worst = int(np.argmax(dists.min(axis=1)))
+                centers[j] = x[worst]
+                new_labels[worst] = j
+        if np.array_equal(new_labels, labels):
+            break
+        labels = new_labels
+    return labels
+
+
+@dataclasses.dataclass
+class SubsetReport:
+    """Result of clustering a fingerprint suite down to representatives.
+
+    Attributes:
+        names: every input fingerprint's name, in input order.
+        representatives: the kept workload names, one per cluster.
+        clusters: representative name -> member names (members include
+            the representative itself).
+        distances: member name -> distance to its representative in the
+            normalized space.
+        max_distance: per-cluster coverage — representative name -> max
+            member distance.
+        coverage: overall max member-to-representative distance (0 when
+            every cluster is a singleton).
+        compression_x: ``len(names) / len(representatives)``.
+    """
+
+    names: List[str]
+    representatives: List[str]
+    clusters: Dict[str, List[str]]
+    distances: Dict[str, float]
+    max_distance: Dict[str, float]
+    coverage: float
+    compression_x: float
+    version: int = SUBSET_VERSION
+
+    def covered(self, bound: float) -> bool:
+        """True when every member lies within ``bound`` of its
+        representative."""
+        return self.coverage <= bound
+
+    def to_json(self) -> Dict[str, Any]:
+        """JSON-serializable dict (round-trips via :meth:`from_json`)."""
+        return {
+            "subset_version": self.version,
+            "names": list(self.names),
+            "representatives": list(self.representatives),
+            "clusters": {k: list(v) for k, v in self.clusters.items()},
+            "distances": {k: float(v) for k, v in self.distances.items()},
+            "max_distance": {k: float(v)
+                             for k, v in self.max_distance.items()},
+            "coverage": float(self.coverage),
+            "compression_x": float(self.compression_x),
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "SubsetReport":
+        """Rebuild a report serialized by :meth:`to_json`."""
+        return cls(
+            names=list(d["names"]),
+            representatives=list(d["representatives"]),
+            clusters={k: list(v) for k, v in d["clusters"].items()},
+            distances={k: float(v) for k, v in d["distances"].items()},
+            max_distance={k: float(v)
+                          for k, v in d["max_distance"].items()},
+            coverage=float(d["coverage"]),
+            compression_x=float(d["compression_x"]),
+            version=int(d.get("subset_version", SUBSET_VERSION)),
+        )
+
+
+def _cluster_once(fps: Sequence[WorkloadFingerprint], x: np.ndarray,
+                  k: int, seed: int) -> SubsetReport:
+    names = [fp.name for fp in fps]
+    labels = _kmeans(x, k, seed)
+    representatives: List[str] = []
+    clusters: Dict[str, List[str]] = {}
+    distances: Dict[str, float] = {}
+    max_dist: Dict[str, float] = {}
+    for j in range(k):
+        idx = np.flatnonzero(labels == j)
+        if not len(idx):          # unreachable: _kmeans reseeds empties
+            continue
+        centroid = x[idx].mean(axis=0)
+        rep_i = idx[int(np.argmin(
+            ((x[idx] - centroid) ** 2).sum(axis=1)))]
+        rep = names[rep_i]
+        members = [names[i] for i in idx]
+        dists = np.sqrt(((x[idx] - x[rep_i]) ** 2).sum(axis=1))
+        representatives.append(rep)
+        clusters[rep] = members
+        for name, d in zip(members, dists):
+            distances[name] = float(d)
+        max_dist[rep] = float(dists.max())
+    representatives.sort()
+    return SubsetReport(
+        names=names,
+        representatives=representatives,
+        clusters={r: clusters[r] for r in representatives},
+        distances=distances,
+        max_distance={r: max_dist[r] for r in representatives},
+        coverage=max(max_dist.values(), default=0.0),
+        compression_x=len(names) / max(len(representatives), 1),
+    )
+
+
+def subset_fingerprints(fps: Sequence[WorkloadFingerprint],
+                        k: Optional[int] = None,
+                        max_distance: Optional[float] = None,
+                        seed: int = 0) -> SubsetReport:
+    """Cluster a fingerprint suite and keep one representative per cluster.
+
+    Args:
+        fps: the fingerprint suite (names must be unique).
+        k: number of clusters.  Omitted with ``max_distance`` set, the
+            smallest ``k`` whose coverage meets the bound is found by
+            scanning up from 1; omitted entirely, defaults to
+            ``ceil(sqrt(n))``.
+        max_distance: optional coverage bound in the normalized space;
+            with ``k`` also given, it is only recorded via
+            :meth:`SubsetReport.covered`, not enforced.
+        seed: clustering seed (deterministic for fixed inputs + seed).
+
+    Returns:
+        A :class:`SubsetReport` mapping representatives to members with
+        per-cluster and overall coverage plus the compression ratio.
+    """
+    fps = list(fps)
+    names = [fp.name for fp in fps]
+    if len(set(names)) != len(names):
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        raise ValueError(f"fingerprint names must be unique; duplicated: "
+                         f"{dupes}")
+    x = normalize_fingerprints(fps)
+    n = len(fps)
+    if k is not None:
+        k = int(k)
+        if not 1 <= k <= n:
+            raise ValueError(f"k must be in [1, {n}], got {k}")
+        return _cluster_once(fps, x, k, seed)
+    if max_distance is not None:
+        for kk in range(1, n + 1):
+            report = _cluster_once(fps, x, kk, seed)
+            if report.coverage <= max_distance:
+                return report
+        return report  # kk == n: all singletons, coverage 0
+    return _cluster_once(fps, x, int(np.ceil(np.sqrt(n))), seed)

@@ -468,3 +468,36 @@ def workload_step_fn(name: str, scale: str):
     else:
         fn = w.step
     return fn, args
+
+
+def proxy_fingerprint(name: str):
+    """Fingerprint a Table-3 proxy (any ``PROXY_SPECS`` key) through the
+    compositional cost model — zero compiles once its edges are cached.
+
+    This is the *proxy side* of the distillation loop: the vector a
+    perfectly-tuned synthesis should land on.  Compare
+    :func:`workload_fingerprint`, which measures the original."""
+    from .engine import fingerprint
+    if name not in PROXY_SPECS:
+        raise KeyError(f"unknown proxy {name!r}; known: "
+                       f"{sorted(PROXY_SPECS)}")
+    dag = ProxySpec.from_json(PROXY_SPECS[name]).to_dag()
+    return fingerprint(dag, name=name)
+
+
+def workload_fingerprint(name: str, scale: str = "tiny"):
+    """Fingerprint an *original* workload implementation — the measured
+    target the paper distills proxies from.
+
+    Big-data originals (``WORKLOADS``) are lowered through HLO cost
+    analysis at ``scale`` via :func:`workload_step_fn`; the AI proxies
+    (``lm_train``/``lm_decode``), which have no separate original here,
+    fall back to their spec DAG's compositional fingerprint."""
+    from .engine import fingerprint
+    if name in WORKLOADS:
+        fn, args = workload_step_fn(name, scale)
+        return fingerprint(fn, *args, name=name)
+    if name in PROXY_SPECS:
+        return proxy_fingerprint(name)
+    raise KeyError(f"unknown workload {name!r}; known: "
+                   f"{sorted(set(WORKLOADS) | set(PROXY_SPECS))}")

@@ -362,6 +362,13 @@ class ServeReport:
     #: per-request host results in trace order (bit-identity checks);
     #: empty under the virtual clock, ``None`` for failed requests
     results: List[Any] = dataclasses.field(default_factory=list, repr=False)
+    #: requests served per structure name — with :attr:`templates` this
+    #: lets ``repro.api.fingerprint(report)`` distill the mix's aggregate
+    #: channel vector without re-running the trace
+    structure_mix: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #: structure name -> its ProxyDAG template (not serialized)
+    templates: Dict[str, Any] = dataclasses.field(default_factory=dict,
+                                                  repr=False)
 
     def status_counts(self) -> Dict[str, int]:
         out: Dict[str, int] = {}
@@ -370,9 +377,10 @@ class ServeReport:
         return out
 
     def to_json(self) -> Dict[str, Any]:
-        d = dataclasses.asdict(self)
+        d = dataclasses.asdict(dataclasses.replace(self, templates={}))
         d.pop("results")
         d.pop("statuses")
+        d.pop("templates")
         d["status_counts"] = self.status_counts()
         d["batch_hist"] = {str(k): v
                            for k, v in sorted(self.batch_hist.items())}
@@ -917,6 +925,12 @@ class ServingEngine:
         served = [r for r in requests if r.rid in sess.lat]
         lost = n - len(served)
         trips = sum(br.trips for br in sess.breakers.values())
+        mix: Dict[str, int] = {}
+        templates: Dict[str, Any] = {}
+        for r in requests:
+            mix[r.structure] = mix.get(r.structure, 0) + 1
+            if r.dag is not None:
+                templates.setdefault(r.structure, r.dag)
         return ServeReport(
             stack=self.stack.name, clock=clock, mode=mode, n_requests=n,
             structures=n_groups,
@@ -944,6 +958,8 @@ class ServingEngine:
             lost_requests=lost,
             statuses=[sess.statuses.get(r.rid, "lost") for r in requests],
             fault_plan=sess.faults.summary(),
+            structure_mix=mix,
+            templates=templates,
             results=[sess.results.get(r.rid) for r in requests])
 
     # -- live submission (start / submit / drain / shutdown) -----------------

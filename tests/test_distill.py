@@ -1,0 +1,238 @@
+"""Proxy distillation: fingerprint determinism + round-trip, distilled-
+vs-hand tuning parity, and subsetting coverage invariants."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import (WorkloadFingerprint, fingerprint, get_stack,
+                       subset_fingerprints, tune_structure)
+from repro.api.spec import ProxySpec, SpecError
+from repro.core import engine
+from repro.core.autotune import coerce_target
+from repro.core.subset import SubsetReport, normalize_fingerprints
+from repro.core.workloads import (PROXY_SPECS, proxy_fingerprint,
+                                  seed_components, workload_fingerprint)
+
+
+def _dag(name):
+    return ProxySpec.from_json(PROXY_SPECS[name]).to_dag()
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+def _fingerprint_digest() -> str:
+    """Channel vectors of one fn-measured and every dag-measured proxy —
+    the cross-process determinism witness."""
+    rows = {n: proxy_fingerprint(n).channels for n in sorted(PROXY_SPECS)}
+    rows["kmeans_fn"] = workload_fingerprint("kmeans", "tiny").channels
+    return json.dumps({k: [repr(c) for c in v] for k, v in rows.items()},
+                      sort_keys=True)
+
+
+def test_fingerprint_deterministic_in_process():
+    assert _fingerprint_digest() == _fingerprint_digest()
+
+
+def test_fingerprint_deterministic_across_processes():
+    want = _fingerprint_digest()
+    code = ("import sys, tests.test_distill as t;"
+            "sys.stdout.write(t._fingerprint_digest())")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [root, os.path.join(root, "src"), env.get("PYTHONPATH", "")])
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    got = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, check=True).stdout
+    assert got == want
+
+
+def test_fingerprint_matches_measure_exactly():
+    # the lossless-basis contract: metrics() reproduces engine.measure
+    for name in sorted(PROXY_SPECS):
+        dag = _dag(name)
+        assert fingerprint(dag, name=name).metrics() == engine.measure(dag)
+
+
+# ---------------------------------------------------------------------------
+# sources: fn / run / serve
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_from_fn_and_profile_agree():
+    from repro.core import characterize
+    from repro.core.workloads import workload_step_fn
+    fn, args = workload_step_fn("kmeans", "tiny")
+    fp_fn = fingerprint(fn, *args, name="kmeans")
+    fp_prof = fingerprint(characterize(fn, args, name="kmeans",
+                                       execute=False))
+    assert fp_fn.channels == fp_prof.channels
+    assert fp_fn.source == "fn" and fp_prof.source == "report"
+
+
+def test_fingerprint_from_run_report():
+    spec = ProxySpec.from_json(PROXY_SPECS["kmeans"])
+    rep = get_stack("openmp").run(spec)
+    fp = fingerprint(rep)
+    assert fp.source == "run"
+    assert fp.host_bytes == rep.io_bytes
+    np.testing.assert_allclose(fp.vector(), fingerprint(spec).vector())
+    # raw-callable runs carry no DAG and must fail loudly
+    raw = get_stack("openmp").run(lambda rng: rng.sum(),
+                                  rng=__import__("jax").random.PRNGKey(0))
+    with pytest.raises(ValueError, match="no attached DAG"):
+        fingerprint(raw)
+
+
+def test_fingerprint_from_serve_report():
+    from repro.api import serve
+    from repro.serve import poisson_trace
+    trace = poisson_trace(n=6, rate_rps=100.0, seed=0,
+                          mix=["terasort", "kmeans"])
+    report = serve(trace, clock="virtual")
+    fp = fingerprint(report)
+    assert fp.source == "serve"
+    expect = sum(
+        c * fingerprint(report.templates[s]).vector()
+        for s, c in report.structure_mix.items())
+    np.testing.assert_allclose(fp.vector(), expect)
+    # the mix itself serializes with the report
+    assert report.to_json()["structure_mix"] == report.structure_mix
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip + schema
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_json_round_trip():
+    fp = proxy_fingerprint("terasort")
+    d = json.loads(json.dumps(fp.to_json()))
+    fp2 = WorkloadFingerprint.from_json(d)
+    assert fp2.channels == fp.channels
+    assert fp2.name == fp.name
+    assert fp2.metrics() == fp.metrics()
+    assert fp2.source == "json"
+
+
+def test_fingerprint_json_validation_errors():
+    good = proxy_fingerprint("kmeans").to_json()
+    for mutate, match in [
+            (lambda d: d.pop("fingerprint_version"), "fingerprint_version"),
+            (lambda d: d.update(fingerprint_version=99), "newer than"),
+            (lambda d: d.update(name=""), "name"),
+            (lambda d: d["channels"].pop("flops"), "flops"),
+            (lambda d: d["channels"].update(bogus=1.0), "bogus"),
+            (lambda d: d.update(host_bytes=-1), "host_bytes"),
+    ]:
+        d = json.loads(json.dumps(good))
+        mutate(d)
+        with pytest.raises(SpecError, match=match):
+            WorkloadFingerprint.from_json(d)
+
+
+def test_coerce_target_accepts_fingerprint_and_dict():
+    fp = proxy_fingerprint("sift")
+    assert coerce_target(fp) == fp.metrics()
+    assert coerce_target({"mix_sort": 0.5}) == {"mix_sort": 0.5}
+    with pytest.raises(TypeError, match="metrics"):
+        coerce_target(object())
+
+
+# ---------------------------------------------------------------------------
+# distillation: measured target matches the hand-declared run
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["terasort", "kmeans", "lm_decode"])
+def test_distilled_deviation_matches_hand_target(name):
+    # 2 big-data + 1 AI proxy: tuning against the measured fingerprint
+    # must do at least as well as tuning against the hand metric dict,
+    # and the deterministic replay must be free (0 traces / 0 compiles)
+    spec = ProxySpec.from_json(PROXY_SPECS[name])
+    dag = spec.to_dag()
+    hand = engine.measure(dag)
+    fp = fingerprint(dag, name=name)
+
+    def detuned():
+        bench = spec.to_benchmark()
+        for e in bench.dag.edges:
+            e.params.extra["weight"] = 1.0
+        return bench
+
+    kw = dict(tol=0.10, max_candidates=32, generations=2,
+              structure_population=4, mutations_per_parent=2,
+              components=seed_components(), seed=0)
+    r_hand = tune_structure(detuned(), hand, **kw)
+    s0 = engine.stats()
+    r_fp = tune_structure(detuned(), fp, **kw)
+    s1 = engine.stats()
+    assert r_fp.final_deviation <= r_hand.final_deviation + 1e-9
+    assert s1["traces"] - s0["traces"] == 0
+    assert r_fp.new_body_compiles == 0
+
+
+# ---------------------------------------------------------------------------
+# subsetting
+# ---------------------------------------------------------------------------
+
+
+def _suite():
+    return [proxy_fingerprint(n) for n in sorted(PROXY_SPECS)]
+
+
+def test_subset_members_within_cluster_bound():
+    report = subset_fingerprints(_suite(), k=3)
+    assert sorted(report.clusters) == report.representatives
+    covered = set()
+    for rep, members in report.clusters.items():
+        assert rep in members
+        for m in members:
+            assert report.distances[m] <= report.max_distance[rep] + 1e-12
+        covered.update(members)
+    assert covered == set(report.names)
+    assert report.coverage == max(report.max_distance.values())
+    assert report.compression_x == pytest.approx(len(report.names) / 3)
+
+
+def test_subset_singleton_clusters_survive():
+    fps = _suite()
+    report = subset_fingerprints(fps, k=len(fps))
+    assert len(report.representatives) == len(fps)
+    assert report.coverage == 0.0
+    assert all(len(m) == 1 for m in report.clusters.values())
+
+
+def test_subset_bound_growth_meets_coverage():
+    fps = _suite()
+    tight = subset_fingerprints(fps, max_distance=0.0)
+    assert len(tight.representatives) == len(fps)
+    loose = subset_fingerprints(fps, max_distance=1e9)
+    assert len(loose.representatives) == 1
+
+
+def test_subset_deterministic_and_round_trips():
+    a = subset_fingerprints(_suite(), k=3, seed=7)
+    b = subset_fingerprints(_suite(), k=3, seed=7)
+    assert a.to_json() == b.to_json()
+    back = SubsetReport.from_json(json.loads(json.dumps(a.to_json())))
+    assert back.to_json() == a.to_json()
+
+
+def test_subset_rejects_duplicates_and_bad_k():
+    fps = _suite()
+    with pytest.raises(ValueError, match="unique"):
+        subset_fingerprints(fps + [fps[0]])
+    with pytest.raises(ValueError, match="k must be"):
+        subset_fingerprints(fps, k=0)
+    with pytest.raises(ValueError, match="at least one"):
+        normalize_fingerprints([])
